@@ -1,0 +1,51 @@
+"""Fig. 10: mixed failures (alternating fail-stop / medium fail-slow) —
+ResiHP vs ReCycle, strengthened ReCycle, strengthened Oobleck."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import sim_config, write_result
+from repro.cluster.simulator import TrainingSim
+
+
+def run(model: str, policy: str, *, iters=300, n_events=6, seed=0):
+    cfg = sim_config(model, seed=seed)
+    sim = TrainingSim(policy, cfg)
+    rng = np.random.default_rng(seed + 3)
+    devices = list(range(cfg.n_devices))
+    rng.shuffle(devices)
+    span = iters * 0.8
+    for i in range(n_events):
+        t = span * (i + 1) / (n_events + 1)
+        d = devices[i]
+        if i % 2 == 0:
+            sim.inject_at(t, lambda c, now, d=d: c.fail_stop(d, now))
+        else:
+            sim.inject_at(t, lambda c, now, d=d: c.fail_slow(d, 0.45, now))
+    sim.run(iters)
+    return {"throughput": sim.avg_throughput(skip=2), "aborted": sim.aborted}
+
+
+def main(quick=False):
+    models = ["llama2-13b"] if quick else ["llama2-7b", "llama2-13b", "llama2-30b"]
+    iters = 150 if quick else 300
+    out, rows = {}, []
+    for model in models:
+        rs = {p: run(model, p, iters=iters)
+              for p in ("recycle", "recycle+", "oobleck+", "resihp")}
+        out[model] = rs
+        resi = rs["resihp"]["throughput"]
+        for p, r in rs.items():
+            t = r["throughput"]
+            rows.append((
+                f"fig10/{model}/{p}",
+                "-" if r["aborted"] else round(t, 2),
+                f"resihp_speedup={resi/max(t,1e-9):.2f}x" if p != "resihp" else ""))
+    write_result("fig10_mixed", out)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

@@ -1,0 +1,62 @@
+"""Fig. 11: component ablation — incrementally enable selective device
+exclusion (§6.1), adaptive layer repartition (§6.2), and progress-aware
+workload migration (§6.3) on top of a ReCycle-style baseline, under mixed
+failures. Throughput normalized to ReCycle."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import sim_config, write_result
+from repro.cluster.simulator import TrainingSim
+
+VARIANTS = {
+    "recycle": ("recycle", {}),
+    "+selective": ("resihp", dict(enable_selective=True, enable_repartition=False,
+                                  migration_mode="recycle")),
+    "+repartition": ("resihp", dict(enable_selective=True, enable_repartition=True,
+                                    migration_mode="recycle")),
+    "+migration(full)": ("resihp", dict(enable_selective=True,
+                                        enable_repartition=True,
+                                        migration_mode="resihp")),
+}
+
+
+def run(model: str, variant: str, *, iters=250, seed=0):
+    name, kw = VARIANTS[variant]
+    cfg = sim_config(model, seed=seed)
+    sim = TrainingSim(name, cfg, policy_kwargs=kw)
+    rng = np.random.default_rng(seed + 11)
+    devices = list(range(cfg.n_devices))
+    rng.shuffle(devices)
+    span = iters * 0.8
+    for i in range(4):
+        t = span * (i + 1) / 5
+        d = devices[i]
+        if i % 2 == 0:
+            sim.inject_at(t, lambda c, now, d=d: c.fail_stop(d, now))
+        else:
+            sim.inject_at(t, lambda c, now, d=d: c.fail_slow(d, 0.45, now))
+    sim.run(iters)
+    return sim.avg_throughput(skip=2)
+
+
+def main(quick=False):
+    models = ["llama2-13b"] if quick else ["llama2-7b", "llama2-13b", "llama2-30b"]
+    iters = 120 if quick else 250
+    out, rows = {}, []
+    for model in models:
+        rs = {v: run(model, v, iters=iters) for v in VARIANTS}
+        base = rs["recycle"] or 1e-9
+        out[model] = {v: {"throughput": t, "normalized": t / base}
+                      for v, t in rs.items()}
+        for v, t in rs.items():
+            rows.append((f"fig11/{model}/{v}", round(t, 2),
+                         f"norm={t/base:.2f}"))
+    write_result("fig11_ablation", out)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

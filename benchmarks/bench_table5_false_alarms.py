@@ -1,0 +1,69 @@
+"""Table 5: false alarms, per-alarm overhead, fail-slow detection accuracy —
+ResiHP (workload filter) vs Greyhound (no filter), over many short jobs with
+fail-slow injected in ~half of them."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import sim_config, write_result
+from repro.cluster.simulator import TrainingSim
+
+
+def run_jobs(policy: str, *, n_jobs=12, iters=110, model="qwen2.5-7b", seed=0):
+    rng = np.random.default_rng(seed)
+    fa = vals = hits = injected = filtered = 0
+    overhead = 0.0
+    for j in range(n_jobs):
+        cfg = sim_config(model, seed=seed * 100 + j)
+        sim = TrainingSim(policy, cfg,
+                          detector_kwargs={"workload_filter": policy == "resihp"})
+        inject = j % 2 == 0
+        if inject:
+            injected += 1
+            lo, hi = int(iters * 0.35), int(iters * 0.65)  # leave warm-up + response room
+            it_at = int(rng.integers(lo, max(hi, lo + 1)))
+            t_at = it_at * 0.8  # ~iteration period
+            dev = int(rng.integers(0, cfg.n_devices))
+            sev = float(rng.choice([0.3, 0.45, 0.6]))
+            sim.inject_at(t_at, lambda c, now, d=dev, s=sev: c.fail_slow(d, s, now))
+        sim.run(iters)
+        st = sim.detector.stats
+        fa += st.false_alarms
+        vals += st.validations
+        filtered += st.filtered_benign
+        overhead += st.validation_overhead_s + st.filter_overhead_s
+        if inject and any(r.kind == "fail-slow" for r in sim.detector.reports):
+            hits += 1
+    return {
+        "policy": policy,
+        "jobs": n_jobs,
+        "injected": injected,
+        "avg_false_alarms": fa / n_jobs,
+        "validations": vals,
+        "filtered_benign": filtered,
+        "overhead_per_false_alarm_s": (overhead / fa) if fa else 0.0,
+        "total_detection_overhead_s": overhead,
+        "detection_accuracy": hits / max(injected, 1),
+    }
+
+
+def main(quick=False):
+    n = 6 if quick else 12
+    iters = 90 if quick else 110
+    rows = []
+    out = {}
+    for model in (["qwen2.5-7b"] if quick else ["qwen2.5-7b", "qwen2.5-14b"]):
+        for policy in ("resihp", "greyhound"):
+            r = run_jobs(policy, n_jobs=n, iters=iters, model=model)
+            out[f"{model}/{policy}"] = r
+            rows.append((f"table5/{model}/{policy}/false_alarms",
+                         round(r["avg_false_alarms"], 2),
+                         f"acc={r['detection_accuracy']:.2f} ovh={r['total_detection_overhead_s']:.2f}s"))
+    write_result("table5_false_alarms", out)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

@@ -1,0 +1,64 @@
+"""Table 6: average throughput (samples/s) under increasing fail-stop
+frequency — ResiHP vs ReCycle vs Oobleck, six models, three frequencies.
+
+Time-scaled: sessions of ~400 iterations with monotonic worker terminations
+every {1/8, 1/12, 1/16} of the session (the paper's 2h/1h/30m over 4-16h
+sessions => ~2-16 failures; the '30m' setting terminates workers until ~50%
+of the cluster is gone)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import MODELS, sim_config, write_result
+from repro.cluster.simulator import TrainingSim
+
+FREQS = {"2h": 8, "1h": 12, "30m": 16}  # failures per session
+
+
+def run(model: str, policy: str, n_failures: int, *, iters=400, seed=0):
+    cfg = sim_config(model, seed=seed)
+    sim = TrainingSim(policy, cfg)
+    rng = np.random.default_rng(seed + 7)
+    # monotonic terminations, spread across distinct TP groups first
+    devices = list(range(cfg.n_devices))
+    rng.shuffle(devices)
+    victims = devices[: min(n_failures, cfg.n_devices // 2)]
+    span = iters * 0.8  # approx session seconds (1 iter ~ 0.8 s sim-time)
+    for i, d in enumerate(victims):
+        t = span * (i + 1) / (len(victims) + 1)
+        sim.inject_at(t, lambda c, now, d=d: c.fail_stop(d, now))
+    sim.run(iters)
+    return {
+        "throughput": sim.avg_throughput(skip=2),
+        "aborted": sim.aborted,
+        "iters_done": len(sim.trace),
+    }
+
+
+def main(quick=False):
+    models = ["llama2-7b", "llama2-13b"] if quick else [
+        "llama2-7b", "llama2-13b", "llama2-30b",
+        "qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b",
+    ]
+    iters = 200 if quick else 400
+    out, rows = {}, []
+    for model in models:
+        ff = run(model, "resihp", 0, iters=iters)["throughput"]
+        out[f"{model}/fault-free"] = ff
+        rows.append((f"table6/{model}/fault-free", round(ff, 2), ""))
+        for freq, n_fail in FREQS.items():
+            for policy in ("oobleck", "recycle", "resihp"):
+                r = run(model, policy, n_fail, iters=iters)
+                key = f"{model}/{policy}/{freq}"
+                out[key] = r
+                val = "-" if r["aborted"] else round(r["throughput"], 2)
+                rows.append((f"table6/{key}", val,
+                             f"frac_of_ff={0 if r['aborted'] else r['throughput']/ff:.2f}"))
+    write_result("table6_failstop", out)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(main())

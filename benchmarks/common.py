@@ -1,0 +1,63 @@
+"""Shared benchmark scaffolding: paper Table 3 model/parallelism settings
+(time-scaled for the CPU container), result I/O, CSV emission.
+
+Time scaling: the paper injects failures every 2h/1h/30m over 4-16h sessions
+(~8-16 failures per run). Simulated time is virtual, so we preserve the
+*ratios*: sessions of N iterations with failures every N/8 .. N/16 iterations.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.cluster.simulator import SimConfig
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+# paper Table 3: scale -> (TP, DP, PP); layer counts per model family
+TABLE3 = {
+    "small": (4, 2, 2),
+    "medium": (4, 2, 4),
+    "large": (4, 2, 8),
+    "xlarge": (4, 4, 16),
+}
+MODELS = {
+    "llama2-7b": ("small", 32),
+    "llama2-13b": ("medium", 40),
+    "llama2-30b": ("large", 60),
+    "qwen2.5-7b": ("small", 28),
+    "qwen2.5-14b": ("medium", 48),
+    "qwen2.5-32b": ("large", 64),
+    "llama2-70b": ("xlarge", 80),
+}
+
+
+def sim_config(model: str, *, seq_len=8192, n_mb=8, noise=0.01, seed=0) -> SimConfig:
+    scale, n_layers = MODELS[model]
+    tp, dp, pp = TABLE3[scale]
+    return SimConfig(dp=dp, pp=pp, tp=tp, n_layers=n_layers,
+                     n_microbatches=n_mb, seq_len=seq_len, noise=noise,
+                     seed=seed)
+
+
+def write_result(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / f"{name}.json"
+    out.write_text(json.dumps(payload, indent=2, default=str))
+    return out
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def emit(rows, header=("name", "value", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

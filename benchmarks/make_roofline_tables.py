@@ -1,0 +1,97 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from results/.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_tables [--dir results/dryrun2]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+ARCH_ORDER = [
+    "jamba-1.5-large-398b", "xlstm-1.3b", "qwen3-8b", "gemma3-1b", "gemma3-4b",
+    "h2o-danube-1.8b", "qwen2-vl-7b", "whisper-medium", "grok-1-314b",
+    "qwen3-moe-30b-a3b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    return f"{x:.3f}" if x >= 0.001 else f"{x:.1e}"
+
+
+def load(dirpath, pod="pod1"):
+    recs = {}
+    for f in glob.glob(f"{dirpath}/*__{pod}__baseline.json"):
+        d = json.load(open(f))
+        recs[(d["arch"], d["shape"])] = d
+    return recs
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | bound | "
+        "MODEL/HLO flops | roofline frac (base) | frac (optimized) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = recs.get((a, s))
+            if d is None:
+                continue
+            if d.get("status") == "skipped":
+                lines.append(f"| {a} | {s} | — | — | — | skip | — | — | — |")
+                continue
+            r = d["roofline"]
+            o = d.get("roofline_optimized", {})
+            lines.append(
+                f"| {a} | {s} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+                f"{fmt_s(r['collective_s'])} | {r['bound']} | "
+                f"{r.get('useful_flops_ratio', 0):.2f} | "
+                f"{r.get('roofline_fraction', 0):.4f} | "
+                f"{o.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs, recs2):
+    lines = [
+        "| arch | shape | 1-pod compile | bytes/device (args+temps) | "
+        "2-pod compile | collectives (1-pod, GB ring/device) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = recs.get((a, s))
+            d2 = recs2.get((a, s))
+            if d is None:
+                continue
+            if d.get("status") == "skipped":
+                lines.append(f"| {a} | {s} | skip (per spec) | — | skip | — |")
+                continue
+            ma = d["memory_analysis"]
+            per_dev = (ma["argument_bytes"] + ma["temp_bytes"]) / 1e9
+            coll = d["walker"]["total_collective_bytes"] / 1e9
+            ok2 = "OK" if (d2 or {}).get("status") == "ok" else (
+                "skip" if (d2 or {}).get("status") == "skipped" else "?")
+            lines.append(
+                f"| {a} | {s} | OK ({d['compile_s']:.0f}s) | {per_dev:.2f} GB | "
+                f"{ok2} | {coll:.1f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun2")
+    ap.add_argument("--pod2-dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir, "pod1")
+    recs2 = load(args.pod2_dir, "pod2")
+    print("## Roofline (single pod, 256 chips, v5e)\n")
+    print(roofline_table(recs))
+    print("\n## Dry-run\n")
+    print(dryrun_table(recs, recs2))
+
+
+if __name__ == "__main__":
+    main()

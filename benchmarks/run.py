@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure. Prints a
+``name,value,derived`` CSV and writes JSON per benchmark to results/.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9,fig10]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+BENCHES = [
+    ("table4", "benchmarks.bench_table4_mape"),
+    ("table5", "benchmarks.bench_table5_false_alarms"),
+    ("table6", "benchmarks.bench_table6_failstop"),
+    ("fig2", "benchmarks.bench_fig2_amplification"),
+    ("fig9", "benchmarks.bench_fig9_failslow"),
+    ("fig10", "benchmarks.bench_fig10_mixed"),
+    ("fig11", "benchmarks.bench_fig11_ablation"),
+    ("fig12", "benchmarks.bench_fig12_convergence"),
+    ("fig13", "benchmarks.bench_fig13_overhead"),
+    ("fig14", "benchmarks.bench_fig14_largescale"),
+    ("kernel", "benchmarks.bench_kernel_blockskip"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,value,derived")
+    failures = []
+    for key, module in BENCHES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            rows = mod.main(quick=args.quick)
+            for r in rows:
+                print(",".join(str(x) for x in r), flush=True)
+            print(f"# {key} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((key, e))
+            traceback.print_exc()
+            print(f"# {key} FAILED: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: "
+                         f"{[k for k, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""256-GPU failure scenarios in the discrete-event simulator: ResiHP vs the
+paper's baselines, mixed fail-stop + fail-slow (Fig. 10/14 style).
+
+    PYTHONPATH=src python examples/cluster_failures.py
+"""
+from repro.cluster.simulator import SimConfig, TrainingSim
+
+
+def run(policy: str) -> TrainingSim:
+    cfg = SimConfig(dp=4, pp=16, tp=4, n_layers=80, n_microbatches=6,
+                    seq_len=8192, seed=0)  # llama2-70b scale: 256 devices
+    sim = TrainingSim(policy, cfg)
+    # recurring mixed failures across distinct TP groups (Fig. 14 style)
+    events = [(15.0, "stop", 37), (35.0, "slow", 101, 0.45), (55.0, "stop", 5),
+              (75.0, "slow", 182, 0.3), (95.0, "stop", 201), (115.0, "slow", 66, 0.5)]
+    for ev in events:
+        if ev[1] == "stop":
+            sim.inject_at(ev[0], lambda c, now, d=ev[2]: c.fail_stop(d, now))
+        else:
+            sim.inject_at(ev[0], lambda c, now, d=ev[2], f=ev[3]: c.fail_slow(d, f, now))
+    sim.run(160, stop_on_abort=False)
+    return sim
+
+
+def main():
+    print(f"{'system':12s} {'samples/s':>10s} {'vs resihp':>10s} "
+          f"{'false alarms':>13s} {'aborted':>8s}")
+    results = {p: run(p) for p in ("resihp", "recycle+", "oobleck+", "recycle")}
+    resi = results["resihp"].avg_throughput(skip=2)
+    for p, sim in results.items():
+        th = sim.avg_throughput(skip=2)
+        print(f"{p:12s} {th:10.2f} {resi/max(th,1e-9):9.2f}x "
+              f"{sim.detector.stats.false_alarms:13d} {str(sim.aborted):>8s}")
+    print("\nreconfiguration events (resihp):")
+    for rec in results["resihp"].trace:
+        interesting = [e for e in rec.events if e[0] != "migrations"]
+        if interesting:
+            print(f"  iter {rec.iteration:3d} t={rec.t_start:7.1f}s  {interesting}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: train a reduced Qwen3-family model for a few steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the public API surface: config registry -> data pipeline (sequence
+packing) -> pjit train step -> Eq. 1 predictor fitting on measured times.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch, list_archs, reduced
+from repro.core.detector.predictor import MicroBatchTimePredictor
+from repro.data.packing import pack_stats
+from repro.data.synth import SyntheticPackedDataset
+from repro.parallel.sharding import NULL_POLICY
+from repro.train.optimizer import optimizer_for
+from repro.train.train_step import build_train_step, init_train_state
+
+
+def main():
+    print("registered architectures:", ", ".join(list_archs()))
+    cfg = reduced(get_arch("qwen3-8b"))
+    print(f"training {cfg.arch_id}: {cfg.param_count()/1e6:.2f}M params")
+
+    opt = optimizer_for(cfg, lr=1e-3)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(build_train_step(cfg, NULL_POLICY, opt, microbatches=2,
+                                    remat=False, flash_chunk=32))
+    ds = SyntheticPackedDataset(cfg, seq_len=128, global_batch=8, seed=0)
+
+    pred = MicroBatchTimePredictor()
+    for it in range(12):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(it).items()}
+        t0 = time.perf_counter()
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        stats = pack_stats(np.asarray(batch["segment_ids"]))
+        n, l2 = sum(s[0] for s in stats), sum(s[1] for s in stats)
+        if it >= 2:  # skip compile steps, then feed the Eq. 1 predictor
+            pred.observe(n, l2, dt)
+        print(f"step {it:2d}  loss {loss:.4f}  {dt*1e3:6.1f} ms  "
+              f"tokens={n}  sum_l2={l2}")
+    pred.fit()
+    print(f"\nEq.1 fit: alpha={pred.alpha:.3e} s/token  "
+          f"beta={pred.beta:.3e} s/token^2  gamma={pred.gamma:.3e} s")
+
+
+if __name__ == "__main__":
+    main()

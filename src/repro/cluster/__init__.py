@@ -1,0 +1,3 @@
+from repro.cluster.registry import ClusterState, ClusterTopology, Device  # noqa: F401
+from repro.cluster.workload import WorkloadGen  # noqa: F401
+from repro.cluster.simulator import TrainingSim, SimConfig  # noqa: F401

@@ -1,0 +1,91 @@
+"""Cluster device registry + failure injection.
+
+Devices carry a normalized throughput p (1.0 = healthy peak) and a liveness
+bit; nodes group devices (heartbeat locality + NVLink/ICI domain). Injection
+mirrors the paper's §8.1 methodology:
+
+  * fail-stop        — worker terminated (speed 0, heartbeats stop);
+  * compute fail-slow — SM-clock-lock analogue: multiply device speed;
+  * network fail-slow — bandwidth contention on a node's links: multiplies
+    the communication-sensitive share of affected devices' throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Device:
+    id: int
+    node: int
+    speed: float = 1.0  # normalized throughput p_i
+    alive: bool = True
+
+    @property
+    def effective(self) -> float:
+        return self.speed if self.alive else 0.0
+
+
+@dataclass(frozen=True)
+class ClusterTopology:
+    n_nodes: int
+    devices_per_node: int = 8
+
+    @property
+    def n_devices(self) -> int:
+        return self.n_nodes * self.devices_per_node
+
+    def node_of(self, device_id: int) -> int:
+        return device_id // self.devices_per_node
+
+
+@dataclass
+class ClusterState:
+    topo: ClusterTopology
+    devices: dict = field(default_factory=dict)
+    events: list = field(default_factory=list)  # injection log
+
+    def __post_init__(self):
+        if not self.devices:
+            self.devices = {
+                i: Device(i, self.topo.node_of(i)) for i in range(self.topo.n_devices)
+            }
+
+    # ------------------------------------------------------------ queries
+    def speeds(self) -> dict:
+        return {i: d.effective for i, d in self.devices.items()}
+
+    def alive_ids(self) -> list:
+        return [i for i, d in self.devices.items() if d.alive]
+
+    def node_devices(self, node: int) -> list:
+        return [i for i, d in self.devices.items() if d.node == node]
+
+    # ---------------------------------------------------------- injection
+    def fail_stop(self, device_id: int, now: float = 0.0):
+        self.devices[device_id].alive = False
+        self.events.append((now, "fail-stop", device_id, 0.0))
+
+    def fail_stop_node(self, node: int, now: float = 0.0):
+        for d in self.node_devices(node):
+            self.devices[d].alive = False
+        self.events.append((now, "fail-stop-node", node, 0.0))
+
+    def fail_slow(self, device_id: int, factor: float, now: float = 0.0):
+        """factor = remaining fraction of peak (0.5 = half speed)."""
+        self.devices[device_id].speed = float(factor)
+        self.events.append((now, "fail-slow", device_id, factor))
+
+    def degrade_network(self, node: int, factor: float, comm_share: float = 0.3,
+                        now: float = 0.0):
+        """Bandwidth contention on a node: the communication share of each
+        device's step time stretches by 1/factor."""
+        eff = 1.0 / ((1.0 - comm_share) + comm_share / max(factor, 1e-9))
+        for d in self.node_devices(node):
+            self.devices[d].speed = min(self.devices[d].speed, eff)
+        self.events.append((now, "net-degrade", node, factor))
+
+    def repair(self, device_id: int, now: float = 0.0):
+        dev = self.devices[device_id]
+        dev.alive, dev.speed = True, 1.0
+        self.events.append((now, "repair", device_id, 1.0))

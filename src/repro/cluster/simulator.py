@@ -1,0 +1,390 @@
+"""Discrete-event cluster training simulator (the §8 evaluation harness).
+
+Executes a training job iteration by iteration at cluster scale with the
+*actual* system code in the loop:
+
+  * ground-truth chunk times come from the Eq. 1 functional form with the
+    per-iteration packed workload (real packing of lognormal documents) and
+    the injected true device speeds;
+  * pipeline execution (with cross-DP migration) is simulated by
+    ProgressAwareMigrator — the same engine the Scheduler ships;
+  * the real Detector consumes the observed iteration-time series and the
+    real heartbeat hierarchy; its reports drive the real policy/Scheduler;
+  * reconfiguration costs (planning, group rebuild, layer transfer) are
+    charged per Fig. 13.
+
+The per-iteration trace (time, throughput, events) reproduces Table 6,
+Fig. 9, Fig. 10, Fig. 11 and the Fig. 14 large-scale run.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.cluster.baselines import BasePolicy, PolicyDecision, make_policy
+from repro.cluster.registry import ClusterState, ClusterTopology
+from repro.cluster.workload import WorkloadGen
+from repro.core.detector.changepoint import CusumDetector
+from repro.core.detector.detector import Detector
+from repro.core.detector.heartbeat import HeartbeatMonitor
+from repro.core.detector.predictor import MicroBatchTimePredictor
+from repro.core.detector.dag_sim import ChunkId
+from repro.core.scheduler.migration import ProgressAwareMigrator
+from repro.core.scheduler.plan import initial_plan
+
+
+@dataclass
+class SimConfig:
+    dp: int = 2
+    pp: int = 4
+    tp: int = 4
+    n_layers: int = 40
+    n_microbatches: int = 8  # per replica
+    seq_len: int = 8192
+    rows_per_microbatch: int = 1
+    schedule: str = "1f1b"
+    # ground-truth per-layer chunk-time coefficients (seconds)
+    alpha: float = 2.0e-7  # per token per layer
+    beta: float = 1.2e-11  # per (token^2) per layer
+    gamma: float = 1.0e-4  # fixed per-chunk per-layer overhead
+    b_ratio: float = 2.0
+    w_ratio: float = 1.0
+    noise: float = 0.01  # multiplicative jitter on true chunk times
+    p2p_cost: float = 2.0e-4
+    migrate_edge_cost: float = 2.0e-3
+    devices_per_node: int = 8
+    # detection model
+    failstop_stall_s: float = 4.0  # heartbeat loss -> NCCL-timeout analogue
+    failslow_detect_iters: int = 2  # paper Fig. 14: detected in 2-3 iterations
+    detector_tax: float = 0.013  # per-iteration Detector overhead (Fig. 13)
+    seed: int = 0
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.pp * self.tp
+
+    @property
+    def samples_per_iter(self) -> int:
+        return self.dp * self.n_microbatches * self.rows_per_microbatch
+
+
+@dataclass
+class IterRecord:
+    iteration: int
+    t_start: float
+    duration: float
+    throughput: float  # samples/s
+    events: list = field(default_factory=list)
+
+
+class TrainingSim:
+    def __init__(self, policy_name: str, cfg: SimConfig, *, layer_costs=None,
+                 policy_kwargs=None, detector_kwargs=None):
+        self.cfg = cfg
+        self.layer_costs = list(layer_costs) if layer_costs else [1.0] * cfg.n_layers
+        self.topo = ClusterTopology(
+            math.ceil(cfg.n_devices / cfg.devices_per_node), cfg.devices_per_node)
+        self.cluster = ClusterState(self.topo)
+        self.plan0 = initial_plan(
+            cfg.n_layers, cfg.dp, cfg.pp, cfg.tp,
+            microbatches=cfg.n_microbatches, schedule=cfg.schedule)
+        self.policy: BasePolicy = make_policy(
+            policy_name, self.plan0, self.layer_costs, **(policy_kwargs or {}))
+        self.gen = WorkloadGen(cfg.seq_len, cfg.dp, cfg.n_microbatches,
+                               rows_per_microbatch=cfg.rows_per_microbatch,
+                               seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + 1)
+
+        # ---- detection stack (real code) ----
+        hb = HeartbeatMonitor(interval=1.0, miss_threshold=3)
+        for n in range(self.topo.n_nodes):
+            hb.register_node(n, self.cluster.node_devices(n))
+        self._fitted = self._fit_predictor()
+        dkw = dict(detector_kwargs or {})
+        dkw.setdefault("workload_filter", policy_name.lower() == "resihp")
+        self.detector = Detector(
+            healthy_time_fn=self._healthy_time,
+            validate_fn=self._validate,
+            heartbeat=hb,
+            changepoint_factory=lambda: CusumDetector(warmup=10),
+            **dkw,
+        )
+        # the system's *belief* about device speeds (truth lives in cluster)
+        self.known_speeds = {d: 1.0 for d in self.cluster.devices}
+        self._belief_dirty = True
+        self._decision: Optional[PolicyDecision] = None
+        self._failslow_backlog: list = []  # (device, true_speed, detect_at_iter)
+        self.trace: list = []
+        self.now = 0.0
+        self.it = 0
+        self.aborted = False
+        self.failure_schedule: list = []  # (time_s, fn(cluster, now)) sorted
+
+    # ------------------------------------------------------------ predictor
+    def _fit_predictor(self) -> MicroBatchTimePredictor:
+        """Warm-up profiling: fit Eq. 1 on healthy synthetic chunks."""
+        cfg = self.cfg
+        pred = MicroBatchTimePredictor(backward_ratio=cfg.b_ratio,
+                                       weight_ratio=cfg.w_ratio)
+        for i in range(24):
+            w = self.gen.for_iteration(10_000 + i)
+            mb = w.per_replica[0][0]
+            t = (cfg.alpha * mb.n_tokens + cfg.beta * mb.sum_l2 + cfg.gamma)
+            pred.observe(mb.n_tokens, mb.sum_l2, t, n_layers=1)
+        return pred.fit()
+
+    def _healthy_time(self, workload) -> float:
+        """Eq. 2: expected healthy iteration time for this workload under the
+        current plan — DAG critical path with predicted chunk times."""
+        decision = self._decision
+        plan = decision.plan if decision else self.plan0
+        share = self._stage_shares(plan)
+
+        def cost(cid: ChunkId, executor=None) -> float:
+            mbw = workload.stats(cid.replica, cid.mb)
+            return self._fitted.predict(
+                mbw.n_tokens, mbw.sum_l2,
+                n_layers=share[cid.stage] * len(self.layer_costs),
+                kind=cid.kind,
+            )
+
+        m = ProgressAwareMigrator(
+            n_stages=plan.replicas[0].pp, n_replicas=plan.dp,
+            n_microbatches=decision.n_mb if decision else plan.microbatches,
+            chunk_cost=cost, schedule=self.cfg.schedule, policy="none",
+            p2p_cost=self.cfg.p2p_cost,
+        )
+        r = m.run()
+        return r.makespan if r.status == "ok" else float("inf")
+
+    def _validate(self, iteration: int) -> list:
+        """Validation phase: localize degraded devices (ground-truth lookup —
+        Greyhound's micro-benchmark pass; the cost is charged by Detector)."""
+        out = []
+        for d, dev in self.cluster.devices.items():
+            if dev.alive and dev.speed < 0.97 and self.known_speeds.get(d, 1.0) > dev.speed:
+                out.append((d, dev.speed))
+        return out
+
+    # ------------------------------------------------------------- helpers
+    def _stage_shares(self, plan, replica: int = 0) -> dict:
+        total = sum(self.layer_costs)
+        shares = {}
+        for s, st in enumerate(plan.replicas[replica].stages):
+            shares[s] = sum(self.layer_costs[i] for i in st.layers) / total
+        return shares
+
+    def _true_stage_speeds(self, plan) -> dict:
+        """Effective speed of each (replica, stage) group under TRUE device
+        state: (k/tp0) * min p over the group; 0 if any member is dead."""
+        tp0 = self.cfg.tp
+        speeds = self.cluster.speeds()
+        out = {}
+        for r, rep in enumerate(plan.replicas):
+            for s, st in enumerate(rep.stages):
+                if not st.devices:
+                    out[(r, s)] = 0.0
+                    continue
+                vals = [speeds.get(d, 0.0) for d in st.devices]
+                out[(r, s)] = 0.0 if min(vals) <= 0 else (st.tp / tp0) * min(vals)
+        return out
+
+    # ------------------------------------------------------------ schedule
+    def inject_at(self, time_s: float, fn: Callable):
+        """fn(cluster, now) applied once simulated time passes time_s."""
+        self.failure_schedule.append((time_s, fn))
+        self.failure_schedule.sort(key=lambda x: x[0])
+
+    def _apply_due_injections(self):
+        fired = []
+        while self.failure_schedule and self.failure_schedule[0][0] <= self.now:
+            t, fn = self.failure_schedule.pop(0)
+            fn(self.cluster, self.now)
+            fired.append(t)
+        return fired
+
+    # ------------------------------------------------------------ stepping
+    def _sync_beliefs(self) -> list:
+        """Detection: heartbeats catch fail-stop immediately; fail-slow is
+        detected via the Detector's series analysis with latency."""
+        events = []
+        # fail-stop: heartbeat sweep (dead devices stopped beating)
+        for d, dev in self.cluster.devices.items():
+            if dev.alive:
+                node = self.topo.node_of(d)
+                self.detector.heartbeat.device_beat(node, d, self.now, self.it)
+                self.detector.heartbeat.node_beat(node, self.now)
+        # dead nodes stop beating entirely
+        rep = self.detector.poll_failstop(self.now)
+        if rep:
+            for d in rep.devices:
+                if self.known_speeds.get(d, 1.0) != 0.0:
+                    self.known_speeds[d] = 0.0
+                    self._belief_dirty = True
+            events.append(("fail-stop-detected", rep.devices))
+            self.now += self.cfg.failstop_stall_s
+        # fail-slow backlog promoted after detect latency
+        still = []
+        for d, speed, at in self._failslow_backlog:
+            if self.it >= at:
+                if self.known_speeds.get(d, 1.0) != speed:
+                    self.known_speeds[d] = speed
+                    self._belief_dirty = True
+                    events.append(("fail-slow-detected", (d, speed)))
+            else:
+                still.append((d, speed, at))
+        self._failslow_backlog = still
+        return events
+
+    def step(self) -> IterRecord:
+        cfg = self.cfg
+        events = []
+        events += [("injection", t) for t in self._apply_due_injections()]
+        events += self._sync_beliefs()
+
+        if self._belief_dirty or self._decision is None:
+            changed = self._decision is not None and self._belief_dirty
+            self._decision = self.policy.decide(self.known_speeds, changed=changed)
+            self._belief_dirty = False
+            if self._decision.reconfig_overhead_s:
+                self.now += self._decision.reconfig_overhead_s
+                events.append(("reconfig", self._decision.reconfig_overhead_s))
+                self.detector.rebaseline()
+        decision = self._decision
+        if decision.aborted:
+            self.aborted = True
+            rec = IterRecord(self.it, self.now, math.inf, 0.0,
+                             events + [("aborted", decision.detail)])
+            self.trace.append(rec)
+            return rec
+
+        workload = self.gen.for_iteration(self.it)
+        plan = decision.plan
+        true_speed = self._true_stage_speeds(plan)
+        if decision.slowdown_recovery > 0.0:
+            # schedule-level mitigation (Adaptra): hides part of a slowdown
+            true_speed = {
+                e: (v + (1.0 - v) * decision.slowdown_recovery if 0.0 < v < 1.0 else v)
+                for e, v in true_speed.items()
+            }
+        # ZB splits the 1F1B backward into B (activation) + W (weight): the
+        # two must sum to the 1F1B backward cost, not add to it
+        if decision.schedule.lower().startswith("zb"):
+            mult = {"F": 1.0, "B": cfg.b_ratio - cfg.w_ratio, "W": cfg.w_ratio}
+        else:
+            mult = {"F": 1.0, "B": cfg.b_ratio, "W": cfg.w_ratio}
+        jit = float(self.rng.normal(1.0, cfg.noise)) if cfg.noise else 1.0
+
+        def make_cost(share, replica_map=None):
+            def cost(cid: ChunkId, executor) -> float:
+                r = replica_map(cid.replica) if replica_map else cid.replica
+                mbw = workload.stats(r, cid.mb)
+                base = (cfg.alpha * mbw.n_tokens + cfg.beta * mbw.sum_l2 + cfg.gamma)
+                base *= share[cid.stage] * len(self.layer_costs) * mult[cid.kind]
+                e = (r, executor[1]) if replica_map else executor
+                v = true_speed.get(e, 1.0)
+                return base * jit / max(v, 1e-9)
+            return cost
+
+        dead = [e for e, v in true_speed.items() if v <= 0.0]
+        if decision.migration_policy == "none":
+            # replicas may be heterogeneous (Oobleck templates): simulate each
+            # pipeline independently; the iteration ends at the DP sync = max.
+            res = self._run_independent(decision, make_cost, dead)
+        else:
+            share = self._stage_shares(plan)
+            m = ProgressAwareMigrator(
+                n_stages=plan.replicas[0].pp,
+                n_replicas=plan.dp,
+                n_microbatches=decision.n_mb,
+                chunk_cost=make_cost(share),
+                schedule=decision.schedule,
+                dead_executors=dead,
+                policy=decision.migration_policy,
+                delta=decision.delta,
+                p2p_cost=cfg.p2p_cost,
+                migrate_edge_cost=cfg.migrate_edge_cost,
+            )
+            res = m.run()
+        if res.status != "ok":
+            # undetected dead executor stalls the job until detection kicks in
+            self.aborted = decision.migration_policy == "none" and bool(
+                set(dead) & set(plan.dead_stages or ())
+            )
+            duration = cfg.failstop_stall_s
+            rec = IterRecord(self.it, self.now, duration, 0.0,
+                             events + [("stalled", res.detail)])
+        else:
+            duration = res.makespan * (1.0 + cfg.detector_tax)
+            thpt = cfg.samples_per_iter / duration
+            rec = IterRecord(self.it, self.now, duration, thpt,
+                             events + [("migrations", len(res.migrations))] if res.migrations else events)
+
+        # fail-slow series detection on the observed time (real Detector) —
+        # only systems with a fail-slow story run it (vanilla ReCycle/Oobleck
+        # have no detector; their belief stays healthy, execution stays slow)
+        if self.policy.handles_failslow and not math.isinf(rec.duration):
+            drep = self.detector.observe_iteration(self.it, rec.duration, workload, self.now)
+            if drep:
+                for d, speed in drep.devices:
+                    self._failslow_backlog.append(
+                        (d, speed, self.it + cfg.failslow_detect_iters - 1))
+                rec.events.append(("failslow-report", drep.devices))
+
+        self.now += rec.duration if not math.isinf(rec.duration) else 0.0
+        self.it += 1
+        self.trace.append(rec)
+        return rec
+
+    def _run_independent(self, decision, make_cost, dead):
+        """Per-replica pipeline simulation for non-migrating policies; the
+        iteration ends at the global DP synchronization (max over replicas)."""
+        from repro.core.scheduler.migration import SimResult
+
+        plan = decision.plan
+        worst, finishes = 0.0, {}
+        all_ok = True
+        detail = ""
+        for r, rep in enumerate(plan.replicas):
+            if decision.n_mb[r] <= 0:
+                continue
+            share = self._stage_shares(plan, r)
+            dead_r = [(0, s) for (dr, s) in dead if dr == r and s < rep.pp]
+            m = ProgressAwareMigrator(
+                n_stages=rep.pp, n_replicas=1,
+                n_microbatches=[decision.n_mb[r]],
+                chunk_cost=make_cost(share, replica_map=lambda _=None, r=r: r),
+                schedule=decision.schedule,
+                dead_executors=dead_r,
+                policy="none",
+                p2p_cost=self.cfg.p2p_cost,
+            )
+            res_r = m.run()
+            if res_r.status != "ok":
+                all_ok = False
+                detail = res_r.detail
+                continue
+            worst = max(worst, res_r.makespan)
+            finishes[r] = res_r.makespan
+        if not all_ok:
+            return SimResult(math.inf, "aborted", {}, [], {}, finishes, detail=detail)
+        return SimResult(worst, "ok", {}, [], {}, finishes)
+
+    def run(self, n_iters: int, *, stop_on_abort=True) -> list:
+        for _ in range(n_iters):
+            rec = self.step()
+            if self.aborted and stop_on_abort:
+                break
+        return self.trace
+
+    # ------------------------------------------------------------- metrics
+    def avg_throughput(self, *, skip: int = 0) -> float:
+        recs = [r for r in self.trace[skip:] if not math.isinf(r.duration)]
+        if not recs:
+            return 0.0
+        total_t = sum(r.duration for r in recs)
+        total_s = sum(r.throughput * r.duration for r in recs)
+        return total_s / max(total_t, 1e-9)

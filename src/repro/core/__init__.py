@@ -1,0 +1,1 @@
+from repro.core.resihp import ResiHPController  # noqa: F401

@@ -1,0 +1,5 @@
+from repro.core.detector.predictor import MicroBatchTimePredictor  # noqa: F401
+from repro.core.detector.dag_sim import PipelineDag, simulate_pipeline  # noqa: F401
+from repro.core.detector.changepoint import BOCPD, CusumDetector  # noqa: F401
+from repro.core.detector.heartbeat import HeartbeatMonitor  # noqa: F401
+from repro.core.detector.detector import Detector, FailureReport  # noqa: F401

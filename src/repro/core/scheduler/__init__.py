@@ -1,0 +1,6 @@
+from repro.core.scheduler.plan import ParallelPlan, ReplicaPlan, StagePlan  # noqa: F401
+from repro.core.scheduler.tp_reconfig import reconfigure_tp_group, candidate_degrees  # noqa: F401
+from repro.core.scheduler.repartition import repartition_layers  # noqa: F401
+from repro.core.scheduler.migration import ProgressAwareMigrator  # noqa: F401
+from repro.core.scheduler.p2p import p2p_mapping, p2p_cost_bytes  # noqa: F401
+from repro.core.scheduler.scheduler import Scheduler  # noqa: F401

@@ -1,0 +1,209 @@
+"""The ResiHP Scheduler (paper §6): progressive TP -> PP -> DP adaptation.
+
+Given a failure report (from the Detector), the current ParallelPlan, and
+per-device normalized throughputs, produce an AdaptationPlan:
+
+  1. TP (§6.1): selective exclusion inside each affected TP group (Eq. 3/4);
+     survivors that don't fit the power-of-two subgroup become node-local
+     standbys; a group with no feasible subgroup leaves a *dead stage*.
+  2. PP (§6.2): uniform layer repartition against per-stage effective speeds.
+     Uniform across DP replicas (gradient all-reduce stays layer-aligned), so
+     the per-stage speed used is the min across replicas — the global DP
+     sync is gated by the slowest replica at that stage.
+  3. DP (§6.3): stage-granular progress-aware migration parameters (delta,
+     memory capacity) for the online migrator; dead stages are marked for
+     fail-stop eviction.
+
+The Scheduler is pure planning — no jax. The engine/cluster-sim executes
+plans; `plan_overhead_s` is measured for the Fig. 13 overhead benchmark.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.scheduler.plan import ParallelPlan, ReplicaPlan, StagePlan
+from repro.core.scheduler.repartition import repartition_layers
+from repro.core.scheduler.tp_reconfig import TPReconfig, reconfigure_tp_group
+
+
+@dataclass
+class AdaptationPlan:
+    plan: ParallelPlan
+    stage_speeds: dict  # (replica, stage) -> effective speed (healthy tp = 1.0)
+    dead_stages: tuple  # ((replica, stage), ...)
+    restore_required: bool  # all replicas of some stage are dead (Fig. 8b)
+    plan_overhead_s: float
+    notes: list = field(default_factory=list)
+
+
+def k_min_for(param_bytes_per_layer: float, n_layers_stage: int,
+              hbm_bytes: float, *, state_multiplier: float = 4.0,
+              activation_bytes: float = 2e9) -> int:
+    """Memory floor for the TP degree of one stage: params+optimizer shards
+    plus activation working set must fit per device."""
+    need = param_bytes_per_layer * n_layers_stage * state_multiplier
+    avail = max(hbm_bytes - activation_bytes, 1.0)
+    k = 1
+    while need / k > avail:
+        k *= 2
+    return k
+
+
+@dataclass
+class Scheduler:
+    layer_costs: list  # per-layer healthy cost (repartition input)
+    k_min: int = 1
+    delta: int = 0
+    mem_capacity: Optional[int] = None
+    min_layers: int = 1
+    repartition_rel_threshold: float = 0.05  # skip repartition for tiny gains
+    # ablation switches (Fig. 11): progressive adaptation components
+    enable_selective: bool = True  # §6.1 selective exclusion (else whole-group)
+    enable_repartition: bool = True  # §6.2 layer repartition
+
+    # ------------------------------------------------------------ adaptation
+    def adapt(self, plan: ParallelPlan, speeds: dict, *,
+              failed=frozenset()) -> AdaptationPlan:
+        """speeds: {device_id: p_i}; failed: fail-stop device ids (speed 0)."""
+        t0 = time.perf_counter()
+        failed = set(failed) | {d for d, v in speeds.items() if v <= 0.0}
+        notes = []
+
+        # ---- 1. TP: reconfigure every affected group --------------------
+        new_replicas = []
+        group_speed: dict = {}
+        dead: list = []
+        standby_pool = [d for d in plan.standby if d not in failed]
+        for r, rep in enumerate(plan.replicas):
+            stages = []
+            for s, st in enumerate(rep.stages):
+                affected = any(d in failed or speeds.get(d, 1.0) < 1.0 for d in st.devices)
+                if not affected:
+                    stages.append(st)
+                    group_speed[(r, s)] = 1.0 * st.tp
+                    continue
+                if not self.enable_selective and any(d in failed for d in st.devices):
+                    # ablation: conservative whole-group exclusion (§3.2)
+                    dead.append((r, s))
+                    stages.append(StagePlan((), st.layers))
+                    group_speed[(r, s)] = 0.0
+                    notes.append(f"stage (dp{r},pp{s}) dead: whole-group exclusion")
+                    continue
+                # pull node-local standbys into the candidate pool (§6.1)
+                pool = list(st.devices) + standby_pool
+                rec: TPReconfig = reconfigure_tp_group(
+                    pool, speeds, k_min=self.k_min, failed=failed)
+                if rec.tp == 0:
+                    dead.append((r, s))
+                    stages.append(StagePlan((), st.layers))
+                    group_speed[(r, s)] = 0.0
+                    notes.append(f"stage (dp{r},pp{s}) dead: no feasible TP subgroup")
+                    continue
+                # consumed standbys leave the pool; freed devices join it
+                standby_pool = [d for d in rec.standby if d not in st.devices] + [
+                    d for d in rec.standby if d in st.devices
+                ]
+                standby_pool = list(dict.fromkeys(standby_pool))
+                stages.append(StagePlan(rec.devices, st.layers))
+                group_speed[(r, s)] = rec.effective_throughput
+                if rec.tp != st.tp:
+                    notes.append(
+                        f"stage (dp{r},pp{s}) TP {st.tp}->{rec.tp} "
+                        f"thru={rec.effective_throughput:.2f}"
+                    )
+            new_replicas.append(ReplicaPlan(tuple(stages)))
+
+        # ---- 2. PP: uniform layer repartition ---------------------------
+        pp = plan.replicas[0].pp
+        tp0 = max(st.tp for st in plan.replicas[0].stages)
+        # per-stage effective speed normalized to the healthy group = min
+        # across live replicas (the DP sync is gated by the slowest replica)
+        stage_speed = []
+        for s in range(pp):
+            vals = [
+                group_speed[(r, s)] / tp0
+                for r in range(plan.dp)
+                if (r, s) not in dead
+            ]
+            stage_speed.append(min(vals) if vals else 0.0)
+
+        restore_required = any(v == 0.0 for v in stage_speed)
+        if not restore_required and self.enable_repartition:
+            old_layers = [st.layers for st in new_replicas[0].stages]
+            new_parts = repartition_layers(
+                self.layer_costs, stage_speed, min_layers=self.min_layers)
+            if self._worth_it(old_layers, new_parts, stage_speed, notes):
+                new_replicas = [
+                    ReplicaPlan(tuple(
+                        StagePlan(st.devices, new_parts[s])
+                        for s, st in enumerate(rep.stages)
+                    ))
+                    for rep in new_replicas
+                ]
+
+        new_plan = plan.replace(
+            replicas=tuple(new_replicas),
+            standby=tuple(sorted(standby_pool)),
+            dead_stages=tuple(dead),
+        )
+        # effective per-(replica,stage) speed for the migrator / simulator
+        eff = {
+            (r, s): group_speed[(r, s)] / tp0
+            for r in range(plan.dp)
+            for s in range(pp)
+        }
+        return AdaptationPlan(
+            plan=new_plan,
+            stage_speeds=eff,
+            dead_stages=tuple(dead),
+            restore_required=restore_required,
+            plan_overhead_s=time.perf_counter() - t0,
+            notes=notes,
+        )
+
+    def _worth_it(self, old_parts, new_parts, stage_speed, notes) -> bool:
+        from repro.core.scheduler.repartition import partition_bottleneck
+
+        old_b = partition_bottleneck(self.layer_costs, old_parts, stage_speed)
+        new_b = partition_bottleneck(self.layer_costs, new_parts, stage_speed)
+        if new_b <= old_b * (1.0 - self.repartition_rel_threshold):
+            notes.append(f"repartition: bottleneck {old_b:.3f} -> {new_b:.3f}")
+            return True
+        notes.append(
+            f"repartition skipped (gain {1 - new_b / max(old_b, 1e-12):.1%} "
+            f"< {self.repartition_rel_threshold:.0%})"
+        )
+        return False
+
+    # ---------------------------------------------------------- migration
+    def migrator_kwargs(self, adaptation: AdaptationPlan, *, n_mb, chunk_base_cost,
+                        schedule="1f1b", p2p_cost=0.0, migrate_edge_cost=0.0):
+        """Bundle Algorithm-1 parameters for ProgressAwareMigrator. The chunk
+        cost divides the healthy cost by the executor's effective speed."""
+        speeds = adaptation.stage_speeds
+        layer_share = {}
+        total = sum(self.layer_costs)
+        for s, layers in enumerate(adaptation.plan.replicas[0].stages):
+            layer_share[s] = sum(self.layer_costs[i] for i in layers.layers) / total
+
+        def chunk_cost(cid, executor):
+            base = chunk_base_cost(cid) * layer_share[cid.stage] * len(self.layer_costs)
+            v = speeds.get(executor, 1.0)
+            return base / max(v, 1e-9)
+
+        plan = adaptation.plan
+        return dict(
+            n_stages=plan.replicas[0].pp,
+            n_replicas=plan.dp,
+            n_microbatches=plan.microbatches,
+            chunk_cost=chunk_cost,
+            schedule=schedule,
+            dead_executors=adaptation.dead_stages,
+            policy="resihp",
+            delta=self.delta,
+            mem_capacity=self.mem_capacity,
+            p2p_cost=p2p_cost,
+            migrate_edge_cost=migrate_edge_cost,
+        )

@@ -1,0 +1,76 @@
+"""Selective device exclusion within affected TP groups (paper §6.1).
+
+Given the original TP group G, the fail-stop set F_stop, and per-device
+normalized throughput p_i (1.0 = healthy peak), the Scheduler:
+
+  1. generates candidate TP degrees  K = {k | k_min <= k <= |G'|, k = 2^q}
+     (Eq. 3) where G' = G \\ F_stop and k_min is the memory floor;
+  2. for each k, greedily picks the top-k devices by p_i (healthy first,
+     fastest fail-slow devices only when needed);
+  3. selects S* = argmax_k ( k * min_{i in S_k} p_i )  (Eq. 4) — TP collectives
+     synchronize every layer, so a group runs at its slowest member's rate,
+     while a larger k scales aggregate compute;
+  4. keeps unassigned healthy devices online as node-local standbys.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TPReconfig:
+    devices: tuple  # selected subgroup S*, sorted by device id
+    tp: int
+    effective_throughput: float  # k * min p_i  (in units of one healthy device)
+    standby: tuple  # surviving devices left out of S*
+    excluded: tuple  # fail-stop devices removed
+
+    @property
+    def group_speed(self) -> float:
+        """min p_i — the rate every member effectively runs at."""
+        return self.effective_throughput / max(self.tp, 1)
+
+
+def candidate_degrees(n_survivors: int, k_min: int) -> list:
+    """Eq. 3: power-of-two degrees in [k_min, |G'|]."""
+    ks, k = [], 1
+    while k <= n_survivors:
+        if k >= k_min:
+            ks.append(k)
+        k *= 2
+    return ks
+
+
+def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
+                         failed=()) -> TPReconfig:
+    """group: device ids of the original TP group.
+    speeds: {device_id: normalized throughput p_i}; fail-stop devices may be
+    listed in `failed` or have speed <= 0.
+    k_min: memory floor — the minimum TP degree whose shards still fit HBM.
+    """
+    failed = set(failed) | {d for d in group if speeds.get(d, 0.0) <= 0.0}
+    survivors = [d for d in group if d not in failed]
+    ks = candidate_degrees(len(survivors), k_min)
+    if not ks:
+        return TPReconfig((), 0, 0.0, tuple(sorted(survivors)), tuple(sorted(failed)))
+
+    # rank by normalized throughput, healthy (1.0) first
+    ranked = sorted(survivors, key=lambda d: -speeds.get(d, 1.0))
+    best, best_thru = None, -1.0
+    for k in ks:
+        sk = ranked[:k]
+        thru = k * min(speeds.get(d, 1.0) for d in sk)
+        # strictly-greater keeps the smallest k on ties -> frees more standbys
+        if thru > best_thru:
+            best, best_thru = sk, thru
+    standby = tuple(sorted(set(survivors) - set(best)))
+    return TPReconfig(tuple(sorted(best)), len(best), best_thru, standby,
+                      tuple(sorted(failed)))
+
+
+def backfill_from_standby(reconf: TPReconfig, speeds, *, k_min: int = 1) -> TPReconfig:
+    """Re-run selection over survivors + standbys (used when a later failure
+    hits the group again and the node-local standby pool can help — §6.1
+    'reuse them for subsequent intra-node failures')."""
+    pool = list(reconf.devices) + list(reconf.standby)
+    return reconfigure_tp_group(pool, speeds, k_min=k_min)

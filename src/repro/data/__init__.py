@@ -1,0 +1,2 @@
+from repro.data.packing import pack_documents, pack_stats, quadratic_cost  # noqa: F401
+from repro.data.synth import SyntheticPackedDataset, sample_doc_lengths  # noqa: F401

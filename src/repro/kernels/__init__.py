@@ -1,0 +1,7 @@
+from repro.kernels.ops import (  # noqa: F401
+    block_metadata,
+    packed_attention,
+    packed_attention_ref,
+    packed_flash_attention,
+    skipped_block_fraction,
+)

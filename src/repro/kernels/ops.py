@@ -1,0 +1,36 @@
+"""Public jit'd wrapper over the Pallas packed flash attention kernel.
+
+Dispatch: on TPU backends the compiled kernel runs natively; elsewhere
+(this CPU container) it executes in interpret mode — same kernel body,
+Python evaluation — so correctness is validated end to end.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.packed_flash_attn import (  # noqa: F401
+    block_metadata,
+    packed_flash_attention,
+    skipped_block_fraction,
+)
+from repro.kernels.ref import packed_attention_ref  # noqa: F401
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def packed_attention(q, k, v, seg_q, seg_k, pos_q, pos_k, *, causal=True,
+                     window=None, scale=None, block_q=128, block_k=128,
+                     interpret=None):
+    """Segment-aware flash attention; auto-selects native vs interpret."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return packed_flash_attention(
+        q, k, v, seg_q, seg_k, pos_q, pos_k,
+        causal=causal, window=window, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )

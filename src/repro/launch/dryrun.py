@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell from
+ShapeDtypeStructs only, record memory/cost analysis + the HLO-walker roofline
+terms. The two lines above MUST stay first: jax locks the device count on
+first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES_BY_NAME, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.parallel.sharding import policy_for_mesh
+from repro.roofline.analysis import V5E, roofline_terms
+from repro.roofline.hlo import analyze_hlo_text
+from repro.train.train_step import build_prefill_step, build_serve_step, build_train_step
+
+
+def policy_for_cell(mesh, cfg, shape):
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    policy = policy_for_mesh(mesh, shard_batch=shape.global_batch >= dp)
+    tp = policy.tp
+    if tp and cfg.n_heads % tp == 0:
+        attn = "heads"
+    elif tp and cfg.head_dim % tp == 0:
+        attn = "head_dim"
+    else:
+        attn = None
+    return policy.replace(attn_shard=attn)
+
+
+def step_fn_for_cell(cfg, shape, policy, opt, *, microbatches=None, flash_chunk=1024,
+                     remat=True):
+    if shape.kind == "train":
+        if microbatches is None:
+            microbatches = max(1, shape.global_batch // max(policy.dp, 1))
+        return build_train_step(
+            cfg, policy, opt, microbatches=microbatches, remat=remat,
+            flash_chunk=flash_chunk,
+            accum_dtype=jax.numpy.bfloat16 if cfg.param_count() > 5e10 else jax.numpy.float32,
+        )
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, policy, flash_chunk=flash_chunk)
+    return build_serve_step(cfg, policy)
+
+
+def run_cell(arch_id, shape_name, *, multi_pod=False, out_dir=None, save_hlo=False,
+             policy_overrides=None, tag="baseline", cfg_overrides=None,
+             microbatches=None, remat=True, flash_chunk=1024):
+    cfg = get_arch(arch_id)
+    if cfg_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec = {
+        "arch": arch_id, "shape": shape_name, "multi_pod": multi_pod, "tag": tag,
+        "status": "ok",
+    }
+    if shape_name in cfg.shape_skips:
+        rec["status"] = "skipped"
+        rec["reason"] = cfg.shape_skips[shape_name]
+        if out_dir:
+            out = Path(out_dir)
+            out.mkdir(parents=True, exist_ok=True)
+            name = f"{arch_id}__{shape_name}__{'pod2' if multi_pod else 'pod1'}__{tag}"
+            (out / f"{name}.json").write_text(json.dumps(rec, indent=2))
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    policy = policy_for_cell(mesh, cfg, shape)
+    if policy_overrides:
+        policy = policy.replace(**policy_overrides)
+    args_s, shardings, opt = input_specs(cfg, shape, policy)
+    step = step_fn_for_cell(cfg, shape, policy, opt, microbatches=microbatches,
+                            remat=remat, flash_chunk=flash_chunk)
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=shardings,
+                         out_shardings=None, donate_argnums=(0,) if shape.kind != "prefill" else ())
+        lowered = jitted.lower(*args_s)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    cost = analyze_hlo_text(text)
+    terms = roofline_terms(cost, n_dev, cfg, shape)
+    from repro.roofline.analysis import optimized_roofline
+
+    opt_terms = optimized_roofline(cost, n_dev, cfg, shape, tp=policy.tp or 1)
+
+    rec.update({
+        "n_devices": n_dev,
+        "mesh": dict(zip(mesh.axis_names, [int(mesh.shape[a]) for a in mesh.axis_names])),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+        },
+        "xla_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "walker": cost.as_dict(),
+        "roofline": terms,
+        "roofline_optimized": opt_terms,
+    })
+    # HBM fit check: params+opt+temps must fit per device
+    per_dev_state = rec["memory_analysis"]["argument_bytes"]
+    per_dev_temp = rec["memory_analysis"]["temp_bytes"]
+    rec["hbm_model"] = {
+        "per_device_bytes": per_dev_state + per_dev_temp,
+        "capacity_bytes": int(V5E.hbm_bytes),
+        "fits": bool(per_dev_state + per_dev_temp <= V5E.hbm_bytes),
+    }
+
+    if out_dir:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        name = f"{arch_id}__{shape_name}__{'pod2' if multi_pod else 'pod1'}__{tag}"
+        (out / f"{name}.json").write_text(json.dumps(rec, indent=2, default=str))
+        if save_hlo:
+            import gzip
+            with gzip.open(out / f"{name}.hlo.gz", "wt") as f:
+                f.write(text)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s, mp in cells:
+        name = f"{a}__{s}__{'pod2' if mp else 'pod1'}__baseline"
+        if args.skip_existing and (Path(args.out) / f"{name}.json").exists():
+            print(f"[dryrun] {name}: exists, skipping")
+            continue
+        t0 = time.time()
+        try:
+            rec = run_cell(a, s, multi_pod=mp, out_dir=args.out, save_hlo=args.save_hlo)
+            if rec["status"] == "skipped":
+                n_skip += 1
+                print(f"[dryrun] {name}: SKIP ({rec['reason']})")
+            else:
+                n_ok += 1
+                r = rec["roofline"]
+                print(
+                    f"[dryrun] {name}: OK {time.time()-t0:.0f}s "
+                    f"bound={r['bound']} compute={r['compute_s']:.4f}s "
+                    f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                    f"frac={r.get('roofline_fraction', 0):.3f} "
+                    f"fits={rec['hbm_model']['fits']}"
+                )
+        except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+            n_fail += 1
+            err = {"arch": a, "shape": s, "multi_pod": mp, "status": "error",
+                   "error": str(e), "traceback": traceback.format_exc()}
+            Path(args.out).mkdir(parents=True, exist_ok=True)
+            (Path(args.out) / f"{name}.json").write_text(json.dumps(err, indent=2))
+            print(f"[dryrun] {name}: FAIL {e}")
+    print(f"[dryrun] done ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

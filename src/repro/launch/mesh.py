@@ -1,0 +1,28 @@
+"""Mesh construction. Functions, not module-level constants, so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The production grid: one v5e pod (16x16) or two pods (2x16x16)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes, devices=None):
+    """Arbitrary mesh over an explicit device list (the ResiHP Scheduler uses
+    this to build stage meshes over the surviving-device set)."""
+    if devices is None:
+        return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    arr = np.asarray(devices).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_stage_mesh(devices, dp, tp):
+    """A (data, model) mesh for one pipeline stage from an explicit device list."""
+    return make_mesh((dp, tp), ("data", "model"), devices=devices)

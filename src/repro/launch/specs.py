@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+No device allocation: everything here is shapes. Used by the dry-run, the
+roofline harness, and the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.model import init_cache, stacked_init
+from repro.parallel.sharding import ShardingPolicy, split_annotations
+
+S32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, *, with_labels=True):
+    GB, S = shape.global_batch, shape.seq_len
+    if cfg.enc_dec:
+        Sd = max(S // cfg.dec_ratio, 16)
+        b = {
+            "frame_embeds": _sds((GB, S, cfg.d_model), jnp.bfloat16),
+            "enc_segment_ids": _sds((GB, S), S32),
+            "enc_positions": _sds((GB, S), S32),
+            "dec_tokens": _sds((GB, Sd), S32),
+            "dec_segment_ids": _sds((GB, Sd), S32),
+            "dec_positions": _sds((GB, Sd), S32),
+        }
+        if with_labels:
+            b["labels"] = _sds((GB, Sd), S32)
+        return b
+    b = {
+        "tokens": _sds((GB, S), S32),
+        "segment_ids": _sds((GB, S), S32),
+        "positions": _sds((GB, S, 3), S32) if cfg.mrope_sections else _sds((GB, S), S32),
+    }
+    if cfg.vlm:
+        b["vision_embeds"] = _sds((GB, S // 4, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        b["labels"] = _sds((GB, S), S32)
+    return b
+
+
+def decode_batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    GB, S = shape.global_batch, shape.seq_len
+    b = {"tokens": _sds((GB, 1), S32), "lengths": _sds((GB,), S32)}
+    if cfg.enc_dec:
+        b["cross_segment_ids"] = _sds((GB, S), S32)
+        b["cross_positions"] = _sds((GB, S), S32)
+    return b
+
+
+def batch_shardings(policy: ShardingPolicy, batch_specs):
+    """Shard dim 0 (global batch) over the DP axes."""
+    if policy.mesh is None:
+        return None
+    bspec = policy.batch_spec()
+
+    def one(s):
+        return NamedSharding(policy.mesh, P(*(bspec + (None,) * (len(s.shape) - len(bspec)))))
+
+    return jax.tree.map(one, batch_specs)
+
+
+# ------------------------------------------------------------------ caches
+_CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "pos": ("layers", "batch", "kv_seq"),
+    "k_const": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "v_const": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    "conv": ("layers", "batch", None, "dinner"),
+    "ssm": ("layers", "batch", "dinner", None),
+    "C": ("layers", "batch", "heads", None, "head_dim"),
+    "n": ("layers", "batch", "heads", "head_dim"),
+    "m": ("layers", "batch", "heads"),
+    "c": ("layers", "batch", "heads", "head_dim"),
+    "h": ("layers", "batch", "heads", "head_dim"),
+}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, cache_dtype=jnp.bfloat16):
+    cross = shape.seq_len if cfg.enc_dec else 0
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, cache_dtype, cross_len=cross)
+    )
+
+
+def _cache_leaf_sharding(policy, path, leaf):
+    key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    axes = _CACHE_AXES.get(key, (None,) * len(leaf.shape))
+    axes = axes[: len(leaf.shape)]
+    if len(axes) < len(leaf.shape):
+        axes = axes + (None,) * (len(leaf.shape) - len(axes))
+    # cache batch dim follows the batch sharding
+    return policy.sharding_for(axes, leaf.shape)
+
+
+def cache_shardings(policy: ShardingPolicy, cache_s):
+    if policy.mesh is None:
+        return None
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_sharding(policy, path, leaf), cache_s
+    )
+
+
+def serve_param_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """Inference params (bf16) as ShapeDtypeStructs + logical axes."""
+    annotated = jax.eval_shape(lambda k: stacked_init(k, cfg), jax.random.PRNGKey(0))
+    params_s, axes = split_annotations(annotated)
+    params_s = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), params_s)
+    return params_s, axes
+
+
+def param_shardings(policy: ShardingPolicy, params_s, axes):
+    if policy.mesh is None:
+        return None
+    return jax.tree.map(
+        lambda ax, s: policy.sharding_for(ax, s.shape),
+        axes,
+        params_s,
+        is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    """Everything the dry-run needs for one cell: (args, in_shardings) for the
+    step function the cell lowers (train_step / prefill_step / serve_step)."""
+    from repro.train.optimizer import optimizer_for
+    from repro.train.train_step import sharding_for_state
+
+    if shape.kind == "train":
+        opt = optimizer_for(cfg)
+        state_sh, state_s, _ = sharding_for_state(policy, cfg, opt)
+        batch_s = train_batch_specs(cfg, shape)
+        batch_sh = batch_shardings(policy, batch_s)
+        return (state_s, batch_s), (state_sh, batch_sh), opt
+    if shape.kind == "prefill":
+        params_s, axes = serve_param_specs(cfg)
+        params_sh = param_shardings(policy, params_s, axes)
+        batch_s = train_batch_specs(cfg, shape, with_labels=False)
+        batch_sh = batch_shardings(policy, batch_s)
+        return (params_s, batch_s), (params_sh, batch_sh), None
+    # decode
+    params_s, axes = serve_param_specs(cfg)
+    params_sh = param_shardings(policy, params_s, axes)
+    cache_s = cache_specs(cfg, shape)
+    cache_sh = cache_shardings(policy, cache_s)
+    batch_s = decode_batch_specs(cfg, shape)
+    batch_sh = batch_shardings(policy, batch_s)
+    return (params_s, cache_s, batch_s), (params_sh, cache_sh, batch_sh), None

@@ -1,0 +1,8 @@
+from repro.models.model import (  # noqa: F401
+    init_params,
+    init_cache,
+    forward_train,
+    loss_fn,
+    serve_forward,
+    stack_for_scan,
+)

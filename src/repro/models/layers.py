@@ -1,0 +1,88 @@
+"""Common layers: norms, rotary embeddings (incl. M-RoPE), initializers."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import annotate
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    """LeCun-normal-ish fan-in init (traceable for eval_shape)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(np.prod([shape[a] for a in in_axis]))
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def head_rms_norm(x, weight, eps=1e-6):
+    """qk-norm: RMS over the head_dim of (..., H, dh)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+# ------------------------------------------------------------------ rotary
+def rope_angles(positions, head_dim, theta, sections=None):
+    """Rotary angles.
+
+    positions: (..., ) int32 for standard RoPE, or (..., 3) for M-RoPE with
+    `sections` (t, h, w) partitioning the head_dim//2 frequency slots.
+    Returns (..., head_dim//2) float32 angles.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if sections is None:
+        pos = positions.astype(jnp.float32)
+        return pos[..., None] * inv_freq
+    assert sum(sections) == half, (sections, half)
+    # map each frequency slot to one of the 3 position axes
+    sec_ids = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    sec_ids = jnp.asarray(sec_ids)  # (half,)
+    pos = positions.astype(jnp.float32)  # (..., 3)
+    pos_per_slot = jnp.take(pos, sec_ids, axis=-1)  # (..., half)
+    return pos_per_slot * inv_freq
+
+
+def apply_rope(x, angles):
+    """x: (..., H, dh); angles: broadcastable to (..., dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ------------------------------------------------------------ param helpers
+def norm_param(key, d):
+    return annotate(jnp.zeros((d,), jnp.float32), "dmodel")
+
+
+def causal_conv1d(x, w, b, segment_ids=None):
+    """Depthwise causal conv over seq: x (B,S,C), w (C,K), b (C,).
+
+    Implemented as K shifted multiply-adds (K<=4), masked so the receptive
+    field never crosses packed-document boundaries.
+    """
+    K = w.shape[-1]
+    out = x * w[:, -1]
+    for j in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, : x.shape[1]]
+        if segment_ids is not None:
+            seg_shift = jnp.pad(segment_ids, ((0, 0), (j, 0)))[:, : x.shape[1]]
+            same = (seg_shift == segment_ids)[..., None]
+            shifted = jnp.where(same, shifted, 0)
+        out = out + shifted * w[:, -1 - j]
+    return out + b

@@ -1,0 +1,141 @@
+"""Top-k MoE FFN with capacity-buffer dispatch.
+
+Parallelization: the layer runs under shard_map — tokens sharded over the DP
+axes, expert FFN width sharded over the TP axis (per-expert tensor
+parallelism; works for any expert count). With `policy.expert_parallel` and
+E % tp == 0, the expert dim is sharded instead (classic EP; each TP rank
+hosts E/tp full experts and contributes their outputs to the final psum).
+Dispatch is sort-free (cumsum-ranked scatter into capacity buffers) so the
+expert compute is dense batched GEMM — MXU-friendly and exactly countable
+for the roofline walker. The router aux (load-balance) loss is computed
+outside the shard_map region from a replicated router matmul (negligible
+FLOPs) to keep shard_map out_specs trivial.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init
+from repro.parallel.sharding import annotate
+
+
+def init_moe(key, cfg):
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": annotate(dense_init(ks[0], (D, E)), "dmodel", None),
+        "w_gate": annotate(dense_init(ks[1], (E, D, F), in_axis=1), "expert", "dmodel", "ffn"),
+        "w_up": annotate(dense_init(ks[2], (E, D, F), in_axis=1), "expert", "dmodel", "ffn"),
+        "w_down": annotate(dense_init(ks[3], (E, F, D), in_axis=1), "expert", "ffn", "dmodel"),
+    }
+
+
+def _capacity(cfg, n_tokens):
+    c = int(n_tokens * cfg.moe_top_k * cfg.capacity_factor / cfg.n_experts)
+    c = max(8, ((c + 7) // 8) * 8)
+    return min(c, n_tokens)
+
+
+def _moe_math(cfg, router, w_gate, w_up, w_down, x):
+    """Device-local MoE math. x: (B, S, D) local tokens; weights local slices
+    of shape (E_local, D, F_local). Returns the (possibly partial) output that
+    the caller psums over TP."""
+    B, S, D = x.shape
+    E_local = w_gate.shape[0]
+    T = B * S
+    k = cfg.moe_top_k
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ router.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = _capacity(cfg, T)
+    flat_expert = expert_idx.reshape(-1)  # (T*k,) in [0, E)
+    onehot = jax.nn.one_hot(flat_expert, cfg.n_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)  # (T*k, E)
+    pos = jnp.take_along_axis(pos, flat_expert[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < C
+
+    # EP: this shard owns experts [e0, e0 + E_local)
+    e_offset = 0
+    if E_local != cfg.n_experts:
+        e_offset = jax.lax.axis_index(_EP_AXIS_SENTINEL[0]) * E_local
+    local_expert = flat_expert - e_offset
+    on_shard = (local_expert >= 0) & (local_expert < E_local) & keep
+    local_expert = jnp.clip(local_expert, 0, E_local - 1)
+
+    src = jnp.repeat(xt, k, axis=0)  # (T*k, D)
+    buf = jnp.zeros((E_local, C, D), x.dtype)
+    buf = buf.at[local_expert, pos].add(jnp.where(on_shard[:, None], src, 0))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+
+    y = out_buf[local_expert, pos]  # (T*k, D)
+    y = jnp.where(on_shard[:, None], y, 0) * gate_vals.reshape(-1, 1).astype(x.dtype)
+    y = y.reshape(T, k, D).sum(axis=1)
+    return y.reshape(B, S, D)
+
+
+_EP_AXIS_SENTINEL = [None]  # set inside shard_map wrapper when EP is active
+
+
+def moe_ffn(cfg, p, x, policy):
+    """MoE layer. Single-device fallback when no mesh is present."""
+    router, w_gate, w_up, w_down = p["router"], p["w_gate"], p["w_up"], p["w_down"]
+    if policy.mesh is None:
+        return _moe_math(cfg, router, w_gate, w_up, w_down, x)
+
+    mesh, tp, dp = policy.mesh, policy.tp_axis, policy.dp_axes
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    x_spec = P(dp_entry, None, None) if (dp and policy.shard_batch) else P(None, None, None)
+    ep = policy.expert_parallel and tp and cfg.n_experts % policy.tp == 0
+    fsdp_ok = policy.fsdp and dp and cfg.d_model % policy.dp == 0
+
+    if ep:
+        w_spec = P(tp, dp_entry if fsdp_ok else None, None)
+    else:
+        tp_ok = tp and cfg.moe_d_ff % policy.tp == 0
+        w_spec = P(None, dp_entry if fsdp_ok else None, tp if tp_ok else None)
+    wd_spec = P(w_spec[0], w_spec[2], w_spec[1])
+    r_spec = P(None, None)
+
+    def body(router_l, wg_l, wu_l, wd_l, x_l):
+        if fsdp_ok:  # gather the FSDP-sharded dmodel dim of expert weights
+            ax = dp if len(dp) > 1 else dp[0]
+            wg_l = jax.lax.all_gather(wg_l, ax, axis=1, tiled=True)
+            wu_l = jax.lax.all_gather(wu_l, ax, axis=1, tiled=True)
+            wd_l = jax.lax.all_gather(wd_l, ax, axis=2, tiled=True)
+        _EP_AXIS_SENTINEL[0] = tp if ep else None
+        y = _moe_math(cfg, router_l, wg_l, wu_l, wd_l, x_l)
+        _EP_AXIS_SENTINEL[0] = None
+        if tp:
+            y = jax.lax.psum(y, tp)  # combine F-partial (TP) or expert-partial (EP)
+        return y
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(r_spec, w_spec, w_spec, wd_spec, x_spec),
+        out_specs=x_spec,
+        check_vma=False,
+    )(router, w_gate, w_up, w_down, x)
+
+
+def router_aux_loss(cfg, p, x):
+    """Load-balance auxiliary loss (computed in the GSPMD region)."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fraction routed (top-1 proxy) x mean gate prob, scaled by E (Switch-style)
+    top1 = jnp.argmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * mean_prob)

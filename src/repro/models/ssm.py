@@ -1,0 +1,132 @@
+"""Mamba-1 selective SSM block (jamba hybrid layers).
+
+Training/prefill runs a time-step `lax.scan` carrying h (B, d_inner, N): the
+projections (the FLOPs-dominant part) are batched matmuls outside the scan, so
+only elementwise recurrence work is sequential. Packing-aware: the recurrent
+state and the causal conv reset at packed-document boundaries. Decode keeps a
+(conv_state, ssm_state) cache and costs O(1) per token — this is why the
+hybrid/ssm archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, dense_init
+from repro.parallel.sharding import annotate
+
+
+def dt_rank(cfg):
+    return math.ceil(cfg.d_model / 16)
+
+
+def init_mamba(key, cfg):
+    D, di, N, K = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    R = dt_rank(cfg)
+    ks = jax.random.split(key, 9)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+    return {
+        "w_x": annotate(dense_init(ks[0], (D, di)), "dmodel", "dinner"),
+        "w_z": annotate(dense_init(ks[1], (D, di)), "dmodel", "dinner"),
+        "conv_w": annotate(dense_init(ks[2], (di, K)), "dinner", None),
+        "conv_b": annotate(jnp.zeros((di,), jnp.float32), "dinner"),
+        "w_dt": annotate(dense_init(ks[3], (di, R)), "dinner", None),
+        "dt_proj": annotate(dense_init(ks[4], (R, di)), None, "dinner"),
+        "dt_bias": annotate(jnp.full((di,), -4.6, jnp.float32), "dinner"),  # softplus ~0.01
+        "w_B": annotate(dense_init(ks[5], (di, N)), "dinner", None),
+        "w_C": annotate(dense_init(ks[6], (di, N)), "dinner", None),
+        "A_log": annotate(jnp.log(A), "dinner", None),
+        "D_skip": annotate(jnp.ones((di,), jnp.float32), "dinner"),
+        "w_out": annotate(dense_init(ks[7], (di, D)), "dinner", "dmodel"),
+    }
+
+
+def _projections(cfg, p, x, segment_ids):
+    xin = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(x.dtype))
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(x.dtype))
+    xc = causal_conv1d(xin, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), segment_ids)
+    xc = jax.nn.silu(xc)
+    dt_low = jnp.einsum("bsi,ir->bsr", xc, p["w_dt"].astype(x.dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_low, p["dt_proj"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"]
+    )
+    Bm = jnp.einsum("bsi,in->bsn", xc, p["w_B"].astype(x.dtype)).astype(jnp.float32)
+    Cm = jnp.einsum("bsi,in->bsn", xc, p["w_C"].astype(x.dtype)).astype(jnp.float32)
+    return xin, z, xc, dt, Bm, Cm
+
+
+def mamba(cfg, spec, p, x, md, policy, cache=None):
+    """Returns (out (B,S,D), new_cache)."""
+    B, S, D = x.shape
+    di, N, K = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    A = -jnp.exp(p["A_log"])  # (di, N)
+    seg = md.get("segment_ids")
+
+    if cache is not None:
+        # single-token decode with cached conv window + ssm state
+        conv_st, h = cache["conv"], cache["ssm"]  # (B, K-1, di), (B, di, N)
+        xin = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(x.dtype))
+        z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(x.dtype))
+        window = jnp.concatenate([conv_st, xin], axis=1)  # (B, K, di)
+        conv_w = p["conv_w"].astype(x.dtype)  # (di, K); kernel tap K-1 = current step
+        xc = jnp.einsum("bki,ik->bi", window, conv_w) + p["conv_b"].astype(x.dtype)
+        xc = jax.nn.silu(xc)[:, None]  # (B,1,di)
+        dt_low = jnp.einsum("bsi,ir->bsr", xc, p["w_dt"].astype(x.dtype))
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,ri->bsi", dt_low, p["dt_proj"].astype(x.dtype)).astype(jnp.float32)
+            + p["dt_bias"]
+        )[:, 0]
+        Bm = jnp.einsum("bsi,in->bsn", xc, p["w_B"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        Cm = jnp.einsum("bsi,in->bsn", xc, p["w_C"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+        decay = jnp.exp(dt[..., None] * A)  # (B, di, N)
+        h = h * decay + (dt * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, Cm) + p["D_skip"] * xc[:, 0].astype(jnp.float32)
+        y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+        out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+        new_cache = {"conv": window[:, 1:], "ssm": h}
+        return out, new_cache
+
+    xin, z, xc, dt, Bm, Cm = _projections(cfg, p, x, seg)
+
+    # recurrence: h_t = exp(dt_t*A) h_{t-1} + (dt_t * xc_t) B_t ; reset at doc starts
+    if seg is not None:
+        prev_seg = jnp.pad(seg, ((0, 0), (1, 0)), constant_values=-1)[:, :S]
+        keep_prev = (seg == prev_seg).astype(jnp.float32)  # (B,S)
+    else:
+        keep_prev = jnp.ones((B, S), jnp.float32)
+
+    def step(h, xs):
+        dt_t, b_t, c_t, xc_t, kp_t = xs  # (B,di),(B,N),(B,N),(B,di),(B,)
+        decay = jnp.exp(dt_t[..., None] * A)
+        h = h * decay * kp_t[:, None, None] + (dt_t * xc_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bin,bn->bi", h, c_t)
+        return h, y_t
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    xs = (
+        dt.transpose(1, 0, 2),
+        Bm.transpose(1, 0, 2),
+        Cm.transpose(1, 0, 2),
+        xc.astype(jnp.float32).transpose(1, 0, 2),
+        keep_prev.T,
+    )
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + p["D_skip"] * xc.astype(jnp.float32)  # (B,S,di)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = policy.constrain(y, "batch", "seq", "dinner")
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    new_cache = None
+    if md.get("collect_state"):  # prefill: emit decode-ready state
+        new_cache = {"conv": xin[:, -(K - 1):], "ssm": h_last}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype=jnp.float32):
+    di, N, K = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((batch, K - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, N), jnp.float32),
+    }

@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, time-step recurrent with block-diagonal recurrence).
+
+The mLSTM training path uses the chunkwise form (intra-chunk quadratic +
+inter-chunk matrix-state carry, stabilized in log space per the xLSTM paper
+[arXiv:2405.04517]) — the TPU-native adaptation: chunk-local quadratic work
+maps to the MXU, the carried state is (B, H, dh, dh). Decode is O(1)/token
+with (C, n, m) cache, which is why xlstm-1.3b runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, dense_init
+from repro.parallel.sharding import annotate
+
+NEG = -1e30
+
+
+def _di(cfg):
+    return 2 * cfg.d_model
+
+
+def init_mlstm(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    di = _di(cfg)
+    dh = di // H
+    K = cfg.xlstm_conv
+    ks = jax.random.split(key, 9)
+    return {
+        "w_m": annotate(dense_init(ks[0], (D, di)), "dmodel", "dinner"),
+        "w_z": annotate(dense_init(ks[1], (D, di)), "dmodel", "dinner"),
+        "conv_w": annotate(dense_init(ks[2], (di, K)), "dinner", None),
+        "conv_b": annotate(jnp.zeros((di,), jnp.float32), "dinner"),
+        # block-diagonal per-head q/k/v
+        "wq": annotate(dense_init(ks[3], (H, dh, dh), in_axis=1), "heads", None, None),
+        "wk": annotate(dense_init(ks[4], (H, dh, dh), in_axis=1), "heads", None, None),
+        "wv": annotate(dense_init(ks[5], (H, dh, dh), in_axis=1), "heads", None, None),
+        "wi": annotate(dense_init(ks[6], (di, H)), "dinner", None),
+        "wf": annotate(dense_init(ks[7], (di, H)), "dinner", None),
+        "bi": annotate(jnp.zeros((H,), jnp.float32), None),
+        "bf": annotate(jnp.full((H,), 3.0, jnp.float32), None),  # forget ~ sigmoid(3)
+        "gn": annotate(jnp.ones((di,), jnp.float32), "dinner"),
+        "w_out": annotate(dense_init(ks[8], (di, D)), "dinner", "dmodel"),
+    }
+
+
+def _mlstm_inputs(cfg, p, x, segment_ids):
+    H = cfg.n_heads
+    di = _di(cfg)
+    dh = di // H
+    B, S, _ = x.shape
+    xm = jnp.einsum("bsd,di->bsi", x, p["w_m"].astype(x.dtype))
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(x.dtype))
+    xc = causal_conv1d(xm, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype), segment_ids)
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(B, S, H, dh)
+    q = jnp.einsum("bshk,hkl->bshl", xh, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bshk,hkl->bshl", xh, p["wk"].astype(x.dtype)) / math.sqrt(dh)
+    v = jnp.einsum("bshk,hkl->bshl", xm.reshape(B, S, H, dh), p["wv"].astype(x.dtype))
+    li = (jnp.einsum("bsi,ih->bsh", xc, p["wi"].astype(x.dtype)).astype(jnp.float32) + p["bi"])
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", xc, p["wf"].astype(x.dtype)).astype(jnp.float32) + p["bf"]
+    )
+    return q, k, v, li, lf, z
+
+
+def mlstm(cfg, spec, p, x, md, policy, cache=None, chunk=None):
+    chunk = chunk if chunk is not None else getattr(cfg, "mlstm_chunk", 256)
+    B, S, D = x.shape
+    H = cfg.n_heads
+    di = _di(cfg)
+    dh = di // H
+    seg = md.get("segment_ids")
+
+    if cache is not None:
+        # O(1) recurrent decode step
+        q, k, v, li, lf, z = _mlstm_inputs(cfg, p, x, None)
+        C, n, m = cache["C"], cache["n"], cache["m"]  # (B,H,dh,dh),(B,H,dh),(B,H)
+        li, lf = li[:, 0], lf[:, 0]  # (B,H)
+        m_new = jnp.maximum(lf + m, li)
+        fe = jnp.exp(lf + m - m_new)[..., None]
+        ie = jnp.exp(li - m_new)[..., None]
+        kv = k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32)
+        C = fe[..., None] * C + ie[..., None] * kv[0][..., :, None] * kv[1][..., None, :]
+        n = fe * n + ie * kv[0]
+        qf = q[:, 0].astype(jnp.float32)  # (B,H,dh)
+        num = jnp.einsum("bhkl,bhk->bhl", C, qf)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        hflat = (h.reshape(B, 1, di) * p["gn"]).astype(x.dtype)
+        out = jnp.einsum("bsi,id->bsd", hflat * jax.nn.silu(z), p["w_out"].astype(x.dtype))
+        return out, {"C": C, "n": n, "m": m_new}
+
+    q, k, v, li, lf, z = _mlstm_inputs(cfg, p, x, seg)
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    def resh(t, extra=()):  # (B,S,...) -> (nc, B, H, L, ...)
+        t = t.reshape((B, nc, L) + t.shape[2:])
+        if t.ndim == 5:  # (B,nc,L,H,dh)
+            return t.transpose(1, 0, 3, 2, 4)
+        return t.transpose(1, 0, 3, 2)  # gates (B,nc,L,H) -> (nc,B,H,L)
+
+    qc, kc, vc = resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)), resh(v.astype(jnp.float32))
+    lic, lfc = resh(li), resh(lf)
+    if seg is not None:
+        segc = seg.reshape(B, nc, L).transpose(1, 0, 2)  # (nc, B, L)
+        prev = jnp.pad(seg, ((0, 0), (1, 0)), constant_values=-1)[:, :S]
+        keepc = (seg == prev).reshape(B, nc, L).transpose(1, 0, 2)
+    else:
+        segc = jnp.ones((nc, B, L), jnp.int32)
+        keepc = jnp.ones((nc, B, L), jnp.bool_)
+
+    tri = jnp.tril(jnp.ones((L, L), jnp.bool_))
+
+    def body(carry, xs):
+        C, n, m = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qb, kb, vb, lib, lfb, sb, kpb = xs
+        kpf = kpb.astype(jnp.float32)  # (B,L): 0 where a new doc starts
+        # prod(kp[:i]) -> positions that may still see the inter-chunk carry
+        carry_ok = jnp.cumprod(kpf, axis=-1)[:, None, :]  # (B,1,L)
+        # prod(kp[j+1:]) -> steps whose contribution survives to chunk end
+        kp_next = jnp.concatenate([kpf[:, 1:], jnp.ones((kpf.shape[0], 1))], axis=-1)
+        suffix_ok = jnp.flip(jnp.cumprod(jnp.flip(kp_next, -1), -1), -1)[:, None, :]
+
+        b = jnp.cumsum(lfb, axis=-1)  # (B,H,L) inclusive log-decay
+        m_inter = b + m[..., None]  # (B,H,L)
+        dmat = b[..., :, None] - b[..., None, :] + lib[..., None, :]  # (B,H,L,L)
+        smask = (sb[:, None, :, None] == sb[:, None, None, :]) & tri
+        dmat = jnp.where(smask, dmat, NEG)
+        m_intra = dmat.max(axis=-1)
+        m_new = jnp.maximum(m_inter, m_intra)  # (B,H,L)
+        sc = jnp.einsum("bhlk,bhmk->bhlm", qb, kb) * jnp.exp(dmat - m_new[..., None])
+        num = jnp.einsum("bhlm,bhmk->bhlk", sc, vb)
+        inter_w = carry_ok * jnp.exp(m_inter - m_new)  # (B,H,L)
+        num += inter_w[..., None] * jnp.einsum("bhlk,bhkm->bhlm", qb, C)
+        den = sc.sum(-1) + inter_w * jnp.einsum("bhk,bhlk->bhl", n, qb)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]  # (B,H,L,dh)
+        # chunk-end state (drop contributions preceding the last doc boundary)
+        total = b[..., -1]  # (B,H)
+        dk = total[..., None] - b + lib  # (B,H,L) decay from step j to chunk end
+        m_c = jnp.maximum(total + m, dk.max(-1))
+        scale_old = carry_ok[:, :, -1] * jnp.exp(total + m - m_c)  # (B,H)
+        w = suffix_ok * jnp.exp(dk - m_c[..., None])
+        C = scale_old[..., None, None] * C + jnp.einsum("bhl,bhlk,bhlm->bhkm", w, kb, vb)
+        n = scale_old[..., None] * n + jnp.einsum("bhl,bhlk->bhk", w, kb)
+        return (C, n, m_c), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, lic, lfc, segc, keepc))
+    # hs: (nc, B, H, L, dh) -> (B, S, di)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, di)
+    h = (h * p["gn"]).astype(x.dtype)
+    h = policy.constrain(h, "batch", "seq", "dinner")
+    out = jnp.einsum("bsi,id->bsd", h * jax.nn.silu(z), p["w_out"].astype(x.dtype))
+    new_cache = {"C": Cf, "n": nf, "m": mf} if md.get("collect_state") else None
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg, batch):
+    H = cfg.n_heads
+    dh = _di(cfg) // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------- sLSTM
+def init_slstm(key, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_g": annotate(dense_init(ks[0], (D, 4, H, dh)), "dmodel", None, "heads", None),
+        "r_g": annotate(dense_init(ks[1], (4, H, dh, dh), in_axis=2) * 0.5, None, "heads", None, None),
+        "b_g": annotate(jnp.concatenate([
+            jnp.zeros((2, H, dh)), jnp.zeros((1, H, dh)), jnp.zeros((1, H, dh))
+        ]).reshape(4, H, dh).at[1].set(3.0), None, "heads", None),
+        "w_out": annotate(dense_init(ks[2], (D, D)), "dmodel", "dmodel"),
+    }
+
+
+def slstm(cfg, spec, p, x, md, policy, cache=None):
+    """Time-step recurrent sLSTM with per-head block-diagonal recurrence.
+
+    Gates: i (exp), f (exp/sigmoid stabilized), z (tanh cell input), o (sigmoid).
+    """
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    gates_x = jnp.einsum("bsd,dghk->bsghk", x, p["w_g"].astype(x.dtype))  # (B,S,4,H,dh)
+    seg = md.get("segment_ids")
+    if seg is not None and cache is None:
+        prev = jnp.pad(seg, ((0, 0), (1, 0)), constant_values=-1)[:, :S]
+        keep = (seg == prev).astype(jnp.float32).T  # (S,B)
+    else:
+        keep = jnp.ones((S, B), jnp.float32)
+
+    r_g = p["r_g"].astype(jnp.float32)
+    b_g = p["b_g"]
+
+    def step(carry, xs):
+        c, n, m, h = carry  # all (B,H,dh) fp32; h is the output state
+        gx, kp = xs  # (B,4,H,dh), (B,)
+        c, n, m, h = (t * kp[:, None, None] for t in (c, n, m, h))
+        gr = jnp.einsum("bhk,ghkl->bghl", h, r_g)  # (B,4,H,dh)
+        pre = gx.astype(jnp.float32) + gr + b_g
+        it, ft, zt, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        m_new = jnp.maximum(ft + m, it)
+        i_e = jnp.exp(it - m_new)
+        f_e = jnp.exp(ft + m - m_new)
+        c = f_e * c + i_e * jnp.tanh(zt)
+        n = f_e * n + i_e
+        h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    z0 = jnp.zeros((B, H, dh), jnp.float32)
+    if cache is not None:
+        carry0 = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        carry0 = (z0, z0, z0, z0)
+    carry, hs = jax.lax.scan(step, carry0, (gates_x.transpose(1, 0, 2, 3, 4), keep))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", h, p["w_out"].astype(x.dtype))
+    new_cache = None
+    if cache is not None or md.get("collect_state"):
+        new_cache = dict(zip(("c", "n", "m", "h"), carry))
+    return out, new_cache
+
+
+def init_slstm_cache(cfg, batch):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}

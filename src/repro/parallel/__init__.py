@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    Annot,
+    NULL_POLICY,
+    ShardingPolicy,
+    annotate,
+    split_annotations,
+)

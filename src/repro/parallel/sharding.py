@@ -1,0 +1,212 @@
+"""Sharding-rules engine.
+
+Models declare *logical* axes on every parameter/activation; a ShardingPolicy
+maps logical axes onto mesh axes with divisibility-aware fallbacks. This is
+how the same model code lowers on a single CPU device (NULL_POLICY), the
+(16,16) production pod, the (2,16,16) multi-pod mesh, and arbitrary per-stage
+meshes built by the ResiHP Scheduler after a reconfiguration.
+
+Logical axes used across the model zoo:
+  batch, seq, dmodel, vocab, heads, kv_heads, head_dim, ffn, expert,
+  layers (scan stack), dinner (mamba/xlstm inner), state, conv, dtrank
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Annot:
+    """A parameter annotated with logical axis names (one per dim)."""
+
+    value: Any  # jnp.ndarray | ShapeDtypeStruct
+    axes: tuple[Optional[str], ...]
+
+    def __post_init__(self):
+        if hasattr(self.value, "shape"):  # tolerate treedef placeholder objects
+            assert len(self.axes) == len(self.value.shape), (self.axes, self.value.shape)
+
+
+# Registered as a pytree node (axes ride along as aux data) so annotated trees
+# pass through jax.eval_shape / jit tracing transparently.
+jax.tree_util.register_pytree_node(
+    Annot,
+    lambda a: ((a.value,), a.axes),
+    lambda axes, children: Annot(children[0], axes),
+)
+
+
+def annotate(value, *axes) -> Annot:
+    return Annot(value, tuple(axes))
+
+
+def split_annotations(tree):
+    """Split a pytree of Annot into (values_tree, axes_tree)."""
+    is_annot = lambda x: isinstance(x, Annot)
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annot)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annot)
+    return values, axes
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Maps logical axes -> mesh axes. None mesh = single-device no-op."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: tuple[str, ...] = ()  # batch / FSDP axes, e.g. ('pod', 'data')
+    tp_axis: Optional[str] = None  # tensor-parallel axis, e.g. 'model'
+    fsdp: bool = True  # shard params (and opt state) over dp_axes
+    seq_parallel: bool = False  # shard activation seq over tp between blocks
+    decode_kv_seq_shard: bool = True  # shard KV caches over tp on the seq dim
+    expert_parallel: bool = False  # shard experts over tp (vs per-expert TP)
+    # batch sharding can be disabled for global_batch < dp (long_500k)
+    shard_batch: bool = True
+    # joint attention TP decision: 'heads' | 'head_dim' | None. Must be one
+    # consistent choice per arch or SPMD falls back to full remat between the
+    # q projection and the attention einsums.
+    attn_shard: Optional[str] = "heads"
+
+    # ------------------------------------------------------------- sizes
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes])) if axes else 1
+
+    @property
+    def tp(self) -> int:
+        return self.axis_size(self.tp_axis)
+
+    @property
+    def dp(self) -> int:
+        return self.axis_size(self.dp_axes)
+
+    # ------------------------------------------------------- logical->mesh
+    def _mesh_axis_for(self, logical: Optional[str], dim: int, used: set) -> Any:
+        """Pick the mesh axis (or axes) for one logical axis, or None."""
+        tp, dp = self.tp_axis, self.dp_axes
+        if logical is None or self.mesh is None:
+            return None
+
+        def tp_free():
+            return tp is not None and tp not in used
+
+        def dp_free():
+            return bool(dp) and not (set(dp) & used)
+
+        if logical in ("vocab", "ffn", "dinner"):
+            if tp_free() and dim % self.tp == 0:
+                return tp
+        elif logical == "heads":
+            if self.attn_shard == "heads" and tp_free() and dim % self.tp == 0:
+                return tp
+        elif logical == "kv_heads":
+            if self.attn_shard == "heads" and tp_free() and dim % self.tp == 0:
+                return tp
+        elif logical == "head_dim":
+            if self.attn_shard == "head_dim" and tp_free() and dim % self.tp == 0:
+                return tp
+        elif logical == "expert":
+            if self.expert_parallel and tp_free() and dim % self.tp == 0:
+                return tp
+        elif logical == "dmodel":
+            # FSDP axis for parameters
+            if self.fsdp and dp_free() and dim % self.dp == 0:
+                return dp if len(dp) > 1 else dp[0]
+        elif logical == "batch":
+            if self.shard_batch and dp_free():
+                return dp if len(dp) > 1 else dp[0]
+        elif logical == "seq":
+            if self.seq_parallel and tp_free() and dim % self.tp == 0:
+                return tp
+        elif logical == "kv_seq":
+            if not self.decode_kv_seq_shard:
+                return None
+            if not self.shard_batch and tp_free() and dp_free() and dim % (self.tp * self.dp) == 0:
+                # tiny-batch long-context decode: spread the KV sequence over
+                # every mesh axis (flash-decoding-style split)
+                return tuple(dp) + (tp,)
+            if tp_free() and dim % self.tp == 0:
+                return tp
+        return None
+
+    def spec_for(self, axes: tuple, shape: tuple) -> P:
+        """PartitionSpec for a tensor with the given logical axes."""
+        entries, used = [], set()
+        # Two passes: high-priority TP targets first so e.g. ('heads','head_dim')
+        # puts TP on heads when possible, then head_dim never double-books it.
+        order = sorted(
+            range(len(axes)),
+            key=lambda i: {"vocab": 0, "ffn": 0, "dinner": 0, "heads": 0, "expert": 1,
+                           "kv_heads": 1, "head_dim": 2, "batch": 0, "kv_seq": 1,
+                           "seq": 3, "dmodel": 4}.get(axes[i], 9),
+        )
+        picked = {}
+        for i in order:
+            ax = self._mesh_axis_for(axes[i], shape[i], used)
+            if ax is not None:
+                picked[i] = ax
+                used.update((ax,) if isinstance(ax, str) else ax)
+        for i in range(len(axes)):
+            entries.append(picked.get(i))
+        return P(*entries)
+
+    def sharding_for(self, axes: tuple, shape: tuple):
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+    # --------------------------------------------------------- activations
+    def constrain(self, x, *axes):
+        """with_sharding_constraint by logical axes (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec_for(tuple(axes), x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def batch_spec(self) -> P:
+        if self.mesh is None or not self.dp_axes or not self.shard_batch:
+            return P()
+        return P(self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0])
+
+    # ------------------------------------------------------------ params
+    def tree_shardings(self, annot_tree):
+        """NamedSharding tree for a pytree of Annot."""
+        is_annot = lambda x: isinstance(x, Annot)
+        return jax.tree.map(
+            lambda a: self.sharding_for(a.axes, a.value.shape), annot_tree, is_leaf=is_annot
+        )
+
+    def tree_specs(self, axes_tree, values_tree):
+        """PartitionSpec tree given separate axes/values trees."""
+        return jax.tree.map(
+            lambda ax, v: self.spec_for(ax, v.shape),
+            axes_tree,
+            values_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+        )
+
+    def replace(self, **kw) -> "ShardingPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+NULL_POLICY = ShardingPolicy()
+
+
+def policy_for_mesh(mesh: Optional[Mesh], **kw) -> ShardingPolicy:
+    """Infer dp/tp axes from a mesh's axis names."""
+    if mesh is None:
+        return NULL_POLICY
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data", "replica", "fsdp"))
+    tp = "model" if "model" in names else None
+    return ShardingPolicy(mesh=mesh, dp_axes=dp, tp_axis=tp, **kw)

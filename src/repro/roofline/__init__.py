@@ -1,0 +1,2 @@
+from repro.roofline.hlo import analyze_hlo_text, HloCost  # noqa: F401
+from repro.roofline.analysis import roofline_terms, V5E  # noqa: F401

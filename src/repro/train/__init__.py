@@ -1,0 +1,8 @@
+from repro.train.optimizer import make_optimizer  # noqa: F401
+from repro.train.train_step import (  # noqa: F401
+    TrainState,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    init_train_state,
+)

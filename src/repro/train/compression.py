@@ -1,0 +1,86 @@
+"""Gradient compression for the slow (DCN / pod-axis) reduction path:
+int8 block quantization with error feedback.
+
+At multi-pod scale the inter-pod gradient reduce crosses DCN (~25 GB/s/host
+vs 50+ GB/s ICI links); quantizing the pod-axis payload 4x (f32 -> int8 with
+per-block scales) cuts that term. Error feedback accumulates the
+quantization residual locally and re-injects it next step, which keeps SGD
+convergence (Karimireddy et al., "Error Feedback Fixes SignSGD").
+
+Usage inside a train step (pure-jax, shard_map/pjit compatible):
+
+    comp = Int8Compressor(block=256)
+    q, scales = comp.compress(grad + state.residual)
+    # ... all-reduce / psum the int8 payload + f32 scales over 'pod' ...
+    deq = comp.decompress(q, scales)
+    new_residual = (grad + state.residual) - deq
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Int8Compressor:
+    block: int = 256
+
+    def _pad(self, flat):
+        pad = (-flat.shape[0]) % self.block
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat, pad
+
+    def compress(self, x):
+        """x: any-shape f32/bf16 -> (int8 codes (n_blocks, block),
+        f32 scales (n_blocks,), static meta)."""
+        shape = x.shape
+        flat = x.astype(jnp.float32).reshape(-1)
+        flat, pad = self._pad(flat)
+        blocks = flat.reshape(-1, self.block)
+        scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+        safe = jnp.maximum(scale, 1e-30)
+        q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+        return q, scale, (shape, pad)
+
+    def decompress(self, q, scale, meta):
+        shape, pad = meta
+        flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+        if pad:
+            flat = flat[:-pad]
+        return flat.reshape(shape)
+
+    def roundtrip_with_feedback(self, grad, residual):
+        """One error-feedback step: returns (dequantized, new_residual)."""
+        target = grad.astype(jnp.float32) + residual
+        q, s, meta = self.compress(target)
+        deq = self.decompress(q, s, meta)
+        return deq, target - deq
+
+    def compressed_bytes(self, x) -> int:
+        n = x.size
+        n_blocks = -(-n // self.block)
+        return n_blocks * self.block + 4 * n_blocks  # int8 codes + f32 scales
+
+    def ratio(self, x) -> float:
+        return (x.size * x.dtype.itemsize) / self.compressed_bytes(x)
+
+
+def init_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_tree(comp: Int8Compressor, grads, residuals):
+    """Error-feedback compression over a gradient pytree. Returns
+    (dequantized grads, new residuals) — the dequantized values are what the
+    slow-fabric all-reduce would carry (int8 + scales on the wire)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        dq, nr = comp.roundtrip_with_feedback(g, r)
+        out_g.append(dq.astype(g.dtype))
+        out_r.append(nr)
+    return treedef.unflatten(out_g), treedef.unflatten(out_r)

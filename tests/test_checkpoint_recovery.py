@@ -1,0 +1,126 @@
+"""Checkpoint (atomic, double-buffered, reshard-on-load) + Fig. 8 recovery."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import get_arch, reduced
+from repro.core.recovery import recover_state, transfer_plan
+from repro.core.scheduler.plan import ParallelPlan, ReplicaPlan, StagePlan, initial_plan
+from repro.core.scheduler.scheduler import Scheduler
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 8)), "b": jnp.zeros((8,))},
+        "opt": {"m": jnp.ones((8, 8))},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    s = _state()
+    save_checkpoint(tmp_path, s, 7)
+    r, step, extra = restore_checkpoint(tmp_path, target=s)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_commit_ignored_without_marker(tmp_path):
+    s = _state()
+    save_checkpoint(tmp_path, s, 5)
+    # simulate a crash mid-save at step 10: directory without COMMIT
+    d = tmp_path / "step_000000010"
+    d.mkdir()
+    (d / "MANIFEST.json").write_text(json.dumps({"n_leaves": 0}))
+    assert latest_step(tmp_path) == 5
+    _, step, _ = restore_checkpoint(tmp_path, target=s)
+    assert step == 5
+
+
+def test_gc_keeps_last_k(tmp_path):
+    s = _state()
+    for step in (1, 2, 3, 4):
+        save_checkpoint(tmp_path, s, step, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1].endswith("4")
+
+
+def test_manager_interval(tmp_path):
+    mgr = CheckpointManager(tmp_path, interval=5)
+    s = _state()
+    assert mgr.maybe_save(s, 3) is None
+    assert mgr.maybe_save(s, 5) is not None
+    assert mgr.has_checkpoint()
+
+
+def test_extra_payload(tmp_path):
+    save_checkpoint(tmp_path, _state(), 1, extra={"data_cursor": 123})
+    _, _, extra = restore_checkpoint(tmp_path, target=_state())
+    assert extra["data_cursor"] == 123
+
+
+# -------------------------------------------------------------- Fig. 8
+def test_transfer_plan_layer_moves():
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=8)
+    old = initial_plan(8, dp=2, pp=4, tp=2)  # (2,2,2,2)
+    sch = Scheduler(layer_costs=[1.0] * 8)
+    speeds = {d: 1.0 for d in old.devices}
+    speeds[old.replicas[0].stages[1].devices[0]] = 0.0
+    ad = sch.adapt(old, speeds)
+    tp = transfer_plan(cfg, old, ad.plan, dead_stages=ad.dead_stages)
+    assert not tp.restore_required
+    # the slowed stage lost layers; every move has a live source replica
+    assert all(m.src_replica >= 0 for m in tp.moves)
+    assert tp.total_bytes > 0
+    assert tp.seconds() >= 0
+
+
+def test_transfer_plan_restore_required_when_no_source():
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=4)
+    old = initial_plan(4, dp=2, pp=2, tp=1)
+    # new plan moves layer 1 from stage 0 to stage 1, but stage 0 is dead in
+    # both replicas -> no live source
+    new = ParallelPlan(tuple(
+        ReplicaPlan((StagePlan(r.stages[0].devices, (0,)),
+                     StagePlan(r.stages[1].devices, (1, 2, 3))))
+        for r in old.replicas
+    ))
+    tp = transfer_plan(cfg, old, new, dead_stages=[(0, 0), (1, 0)])
+    assert tp.restore_required
+
+
+def test_recover_state_fig8b_checkpoint_fallback(tmp_path):
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=4)
+    old = initial_plan(4, dp=2, pp=2, tp=1)
+    new = ParallelPlan(tuple(
+        ReplicaPlan((StagePlan(r.stages[0].devices, (0,)),
+                     StagePlan(r.stages[1].devices, (1, 2, 3))))
+        for r in old.replicas
+    ))
+    state = _state()
+    mgr = CheckpointManager(tmp_path, interval=1)
+    # no checkpoint -> hard error (training cannot continue)
+    with pytest.raises(RuntimeError):
+        recover_state(cfg, state, old_plan=old, new_plan=new,
+                      shardings=jax.tree.map(lambda _: None, state),
+                      checkpoint_mgr=mgr, dead_stages=[(0, 0), (1, 0)])
+    mgr.maybe_save(state, 1)
+    got, tp, step = recover_state(
+        cfg, state, old_plan=old, new_plan=new,
+        shardings=jax.tree.map(lambda _: None, state),
+        checkpoint_mgr=mgr, dead_stages=[(0, 0), (1, 0)])
+    assert step == 1 and tp.restore_required
+    np.testing.assert_array_equal(
+        np.asarray(got["params"]["w"]), np.asarray(state["params"]["w"]))

@@ -1,0 +1,121 @@
+"""Data pipeline (packing invariants, determinism) + sharding-rules engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.packing import pack_documents, pack_stats, row_to_arrays
+from repro.data.synth import SyntheticPackedDataset
+from repro.configs import get_arch, reduced
+from repro.parallel.sharding import NULL_POLICY, ShardingPolicy
+
+
+# ------------------------------------------------------------------ packing
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 9000), min_size=1, max_size=60),
+       st.integers(64, 4096))
+def test_packing_conserves_tokens(doc_lengths, seq_len):
+    rows = pack_documents(doc_lengths, seq_len)
+    assert sum(sum(r) for r in rows) == sum(doc_lengths)
+    for r in rows:
+        assert sum(r) <= seq_len
+        assert all(l >= 1 for l in r)
+
+
+def test_pack_stats_matches_rows():
+    rng = np.random.default_rng(0)
+    row = [100, 50, 30]
+    tokens, seg, pos, labels = row_to_arrays(row, 256, rng, 1000)
+    (n, l2), = pack_stats(seg[None])
+    assert n == 180
+    assert l2 == 100**2 + 50**2 + 30**2
+
+
+def test_labels_never_cross_documents():
+    rng = np.random.default_rng(0)
+    tokens, seg, pos, labels = row_to_arrays([64, 64], 128, rng, 1000)
+    assert labels[63] == -1  # document boundary
+    assert labels[127] == -1  # row end
+    assert (labels[seg == 0] == -1).all()
+
+
+def test_dataset_deterministic_and_resumable():
+    cfg = reduced(get_arch("qwen3-8b"))
+    ds1 = SyntheticPackedDataset(cfg, 64, 4, seed=7)
+    ds2 = SyntheticPackedDataset(cfg, 64, 4, seed=7)
+    b1, b2 = ds1.batch_at(5), ds2.batch_at(5)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    # resume from saved state reproduces the stream
+    next(ds1); next(ds1)
+    state = ds1.state()
+    a = next(ds1)
+    ds2.restore(state)
+    b = next(ds2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_sum_l2_varies_across_batches():
+    """The paper's §2.2 premise: packed batches vary in sum(l^2)."""
+    cfg = reduced(get_arch("qwen3-8b"))
+    ds = SyntheticPackedDataset(cfg, 512, 8, seed=0)
+    l2s = []
+    for i in range(10):
+        b = ds.batch_at(i)
+        stats = pack_stats(b["segment_ids"])
+        l2s.append(sum(s[1] for s in stats))
+    assert max(l2s) / min(l2s) > 1.05
+
+
+# ----------------------------------------------------------------- sharding
+def _mesh2(shape=(2, 2)):
+    import jax
+
+    if len(jax.devices()) < shape[0] * shape[1]:
+        pytest.skip("needs multiple devices")
+    return jax.make_mesh(shape, ("data", "model"))
+
+
+def test_null_policy_noop():
+    import jax.numpy as jnp
+
+    x = jnp.zeros((4, 8))
+    assert NULL_POLICY.constrain(x, "batch", "seq") is x
+    assert NULL_POLICY.tp == 1 and NULL_POLICY.dp == 1
+
+
+def test_spec_divisibility_fallback():
+    """Logical dims not divisible by the mesh axis stay unsharded."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 4}
+        axis_names = ("data", "model")
+
+    pol = ShardingPolicy(mesh=FakeMesh(), dp_axes=("data",), tp_axis="model")
+    # ffn divisible -> model (TP); dmodel -> data (FSDP); indivisible -> None
+    assert pol.spec_for(("dmodel", "ffn"), (8, 12)) == P("data", "model")
+    assert pol.spec_for(("dmodel", "ffn"), (8, 10)) == P("data", None)
+    assert pol.spec_for(("dmodel", "ffn"), (7, 10)) == P(None, None)
+    # heads sharding respects attn_shard choice
+    assert pol.spec_for(("heads", "head_dim"), (8, 64)) == P("model", None)
+    pol2 = pol.replace(attn_shard="head_dim")
+    assert pol2.spec_for(("heads", "head_dim"), (8, 64)) == P(None, "model")
+    # fsdp: dmodel gets the data axis on params when free
+    assert pol.spec_for(("vocab", "dmodel"), (512, 8)) == P("model", "data")
+
+
+def test_no_axis_double_booking():
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 2}
+        axis_names = ("data", "model")
+
+    pol = ShardingPolicy(mesh=FakeMesh(), dp_axes=("data",), tp_axis="model")
+    spec = pol.spec_for(("batch", "seq", "heads", "head_dim"), (4, 128, 8, 64))
+    used = [e for e in spec if e is not None]
+    flat = []
+    for e in used:
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    assert len(flat) == len(set(flat))

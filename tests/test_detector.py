@@ -1,0 +1,159 @@
+"""Detector stack: Eq. 1 predictor, change-point detectors, heartbeat
+hierarchy, and the workload-aware filter (the paper's Table 4/5 behaviour)."""
+import numpy as np
+import pytest
+
+from repro.core.detector.changepoint import BOCPD, CusumDetector
+from repro.core.detector.detector import Detector
+from repro.core.detector.heartbeat import HeartbeatMonitor
+from repro.core.detector.predictor import MicroBatchTimePredictor
+
+
+# ----------------------------------------------------------- Eq.1 predictor
+def test_predictor_recovers_coefficients():
+    rng = np.random.default_rng(0)
+    a, b, g = 2e-7, 1.5e-11, 5e-4
+    pred = MicroBatchTimePredictor()
+    for _ in range(32):
+        n = int(rng.integers(2000, 8192))
+        l2 = int(rng.integers(1e6, n * n))
+        t = a * n + b * l2 + g
+        pred.observe(n, l2, t * float(rng.normal(1.0, 0.01)))
+    pred.fit()
+    # MAPE on fresh samples ~ the paper's 1.2-1.6% (Table 4, MTP)
+    samples = []
+    for _ in range(64):
+        n = int(rng.integers(2000, 8192))
+        l2 = int(rng.integers(1e6, n * n))
+        samples.append((n, l2, 1, a * n + b * l2 + g))
+    assert pred.mape(samples) < 0.02
+
+
+def test_predictor_backward_ratio():
+    pred = MicroBatchTimePredictor(backward_ratio=2.0, weight_ratio=1.0)
+    pred.alpha, pred.beta, pred.gamma, pred.fitted = 1e-6, 0.0, 0.0, True
+    f = pred.predict(1000, 0, kind="F")
+    assert pred.predict(1000, 0, kind="B") == pytest.approx(2 * f)
+    assert pred.predict(1000, 0, kind="W") == pytest.approx(f)
+    assert pred.predict(1000, 0, kind="F", speed=0.5) == pytest.approx(2 * f)
+
+
+# ------------------------------------------------------------- change-point
+@pytest.mark.parametrize("factory", [lambda: CusumDetector(warmup=10),
+                                     lambda: BOCPD(warmup=10)])
+def test_changepoint_detects_level_shift(factory):
+    rng = np.random.default_rng(1)
+    det = factory()
+    fired_before = 0
+    for i in range(40):
+        if det.update(1.0 + 0.01 * rng.normal()):
+            fired_before += 1
+    fired_after = 0
+    for i in range(15):
+        if det.update(1.35 + 0.01 * rng.normal()):
+            fired_after += 1
+    assert fired_before == 0
+    assert fired_after >= 1
+
+
+def test_cusum_no_false_fire_on_noise():
+    rng = np.random.default_rng(2)
+    det = CusumDetector(warmup=10)
+    fires = sum(det.update(1.0 + 0.02 * rng.normal()) for _ in range(300))
+    assert fires == 0
+
+
+# ---------------------------------------------------------------- heartbeat
+def test_heartbeat_two_level():
+    hb = HeartbeatMonitor(interval=1.0, miss_threshold=3)
+    hb.register_node(0, [0, 1, 2, 3])
+    hb.register_node(1, [4, 5, 6, 7])
+    for t in range(5):
+        for d in range(8):
+            if d != 5:  # device 5 stops beating at t=0
+                hb.device_beat(d // 4, d, float(t), t)
+        hb.node_beat(0, float(t))
+        hb.node_beat(1, float(t))
+    newly = hb.sweep(5.0)
+    assert newly == [5]
+    assert hb.failed_devices == {5}
+    # coordinator load scales with nodes (2), not devices (8)
+    assert hb.n_messages_per_interval == 2
+
+
+def test_heartbeat_node_crash_fails_all_devices():
+    hb = HeartbeatMonitor(interval=1.0, miss_threshold=3)
+    hb.register_node(0, [0, 1])
+    hb.register_node(1, [2, 3])
+    for t in range(3):
+        for d in range(4):
+            hb.device_beat(d // 2, d, float(t))
+        hb.node_beat(0, float(t))
+        hb.node_beat(1, float(t))
+    hb.kill_node(1)  # socket drops
+    newly = hb.sweep(3.5)  # node 0 still fresh (last beat t=2)
+    assert set(newly) >= {2, 3}
+    assert 0 not in hb.failed_devices
+
+
+# ------------------------------------------- workload-aware fail-slow filter
+def _mk_detector(healthy_fn, validate_fn, *, filt=True):
+    hb = HeartbeatMonitor()
+    return Detector(healthy_time_fn=healthy_fn, validate_fn=validate_fn,
+                    heartbeat=hb, workload_filter=filt,
+                    changepoint_factory=lambda: CusumDetector(warmup=10))
+
+
+def test_filter_suppresses_workload_spike():
+    """A heavy-workload iteration spikes the series; the filter predicts the
+    spike from the workload and skips validation (no false alarm)."""
+    calls = []
+    det = _mk_detector(lambda w: w, lambda it: calls.append(it) or [])
+    rng = np.random.default_rng(3)
+    for i in range(30):
+        det.observe_iteration(i, 1.0 + 0.01 * rng.normal(), 1.0)
+    # workload-driven spike: healthy time genuinely 1.4
+    for i in range(30, 36):
+        det.observe_iteration(i, 1.42 + 0.01 * rng.normal(), 1.42)
+    assert det.stats.change_points >= 1
+    assert det.stats.validations == 0
+    assert det.stats.filtered_benign >= 1
+    assert calls == []
+
+
+def test_filter_passes_true_failslow():
+    det = _mk_detector(lambda w: 1.0, lambda it: [(5, 0.5)])
+    rng = np.random.default_rng(4)
+    rep = None
+    for i in range(30):
+        r = det.observe_iteration(i, 1.0 + 0.01 * rng.normal(), 1.0)
+    for i in range(30, 40):
+        r = det.observe_iteration(i, 1.9 + 0.01 * rng.normal(), 1.0)
+        rep = rep or r
+    assert rep is not None and rep.kind == "fail-slow"
+    assert rep.devices == ((5, 0.5),)
+    assert det.stats.false_alarms == 0
+
+
+def test_no_filter_pays_validation_like_greyhound():
+    """Without the filter every change point pays the validation cost, and
+    workload spikes become false alarms (Table 5's Greyhound column)."""
+    det = _mk_detector(lambda w: w, lambda it: [], filt=False)
+    rng = np.random.default_rng(5)
+    for i in range(30):
+        det.observe_iteration(i, 1.0 + 0.01 * rng.normal(), 1.0)
+    for i in range(30, 36):
+        det.observe_iteration(i, 1.42 + 0.01 * rng.normal(), 1.42)
+    assert det.stats.validations >= 1
+    assert det.stats.false_alarms >= 1
+    assert det.overhead_s >= det.validation_cost_s
+
+
+def test_failstop_report_via_heartbeat():
+    det = _mk_detector(lambda w: 1.0, lambda it: [])
+    det.heartbeat.register_node(0, [0, 1])
+    for t in range(3):
+        det.heartbeat.device_beat(0, 0, float(t))
+        det.heartbeat.node_beat(0, float(t))
+    rep = det.poll_failstop(6.0)
+    assert rep is not None and rep.kind == "fail-stop" and 1 in rep.devices

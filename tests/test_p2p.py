@@ -1,0 +1,67 @@
+"""Heterogeneous-TP P2P mapping (§7, Fig. 7): coverage, single-crossing,
+byte accounting."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler.p2p import (
+    chunk_slices,
+    p2p_cost_bytes,
+    p2p_mapping,
+    p2p_time,
+)
+
+POW2 = [1, 2, 4, 8]
+
+
+@settings(max_examples=30, deadline=None)
+@given(ts=st.sampled_from(POW2), tr=st.sampled_from(POW2))
+def test_mapping_covers_every_chunk_once(ts, tr):
+    mapping = p2p_mapping(ts, tr)
+    n = max(ts, tr)
+    chunks = [c for _, _, c in mapping]
+    assert sorted(chunks) == list(range(n))  # each chunk crosses exactly once
+    for s, r, c in mapping:
+        assert 0 <= s < ts and 0 <= r < tr
+        # chunk c lives in sender rank c*ts//n and lands on receiver c*tr//n
+        assert s == c * ts // n and r == c * tr // n
+
+
+def test_mapping_balanced():
+    """Each sender ships n/ts chunks; each receiver gets n/tr chunks."""
+    for ts, tr in [(4, 2), (2, 4), (8, 1), (4, 4)]:
+        mapping = p2p_mapping(ts, tr)
+        n = max(ts, tr)
+        from collections import Counter
+        sc = Counter(s for s, _, _ in mapping)
+        rc = Counter(r for _, r, _ in mapping)
+        assert all(v == n // ts for v in sc.values())
+        assert all(v == n // tr for v in rc.values())
+
+
+def test_scatter_gather_saves_bytes():
+    """Fig. 7: naive resends the tensor tp_recv times; the rule sends once."""
+    t = 10 * 2**20
+    assert p2p_cost_bytes(t, 4, 4, scatter_gather=False) == 4 * t
+    assert p2p_cost_bytes(t, 4, 4, scatter_gather=True) == t
+    assert p2p_cost_bytes(t, 2, 4, scatter_gather=True) == t  # hetero degrees too
+
+
+def test_p2p_time_monotone_in_bytes():
+    assert p2p_time(2**20, 4, 2) < p2p_time(2**24, 4, 2)
+    # scatter/gather beats naive for any multi-rank receiver
+    assert p2p_time(2**24, 4, 4, scatter_gather=True) < p2p_time(
+        2**24, 4, 4, scatter_gather=False)
+
+
+def test_chunk_slices_partition_dim():
+    slices = chunk_slices(1024, 4, 2)
+    assert len(slices) == 4
+    covered = set()
+    for sl in slices:
+        covered |= set(range(sl.start, sl.stop))
+    assert covered == set(range(1024))
+
+
+def test_non_pow2_rejected():
+    with pytest.raises(AssertionError):
+        p2p_mapping(3, 2)

@@ -1,0 +1,209 @@
+"""Scheduler: Eq. 3/4 TP reconfiguration, §6.2 layer repartition (exact DP vs
+brute force), §6.3 migration invariants, end-to-end progressive adaptation."""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler.migration import ProgressAwareMigrator
+from repro.core.scheduler.plan import initial_plan
+from repro.core.scheduler.repartition import (
+    partition_bottleneck,
+    repartition_layers,
+)
+from repro.core.scheduler.scheduler import Scheduler
+from repro.core.scheduler.tp_reconfig import (
+    backfill_from_standby,
+    candidate_degrees,
+    reconfigure_tp_group,
+)
+
+
+# ------------------------------------------------------------------ Eq. 3/4
+def test_candidate_degrees():
+    assert candidate_degrees(7, 1) == [1, 2, 4]
+    assert candidate_degrees(8, 2) == [2, 4, 8]
+    assert candidate_degrees(3, 4) == []
+
+
+def test_selective_exclusion_failstop():
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.0, 2: 1.0, 3: 1.0})
+    assert rec.tp == 2 and rec.effective_throughput == 2.0
+    assert 1 in rec.excluded and len(rec.standby) == 1
+
+
+def test_selective_exclusion_drops_slow_member():
+    # k=4 with a 0.4-speed member: 4*0.4=1.6 < k=2 healthy: 2.0
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.4, 2: 1.0, 3: 1.0})
+    assert rec.tp == 2 and 1 not in rec.devices
+
+
+def test_keeps_fast_failslow_when_it_wins():
+    # 0.9-speed member: 4*0.9=3.6 > 2.0 -> keep the whole group
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.9, 2: 1.0, 3: 1.0})
+    assert rec.tp == 4 and rec.effective_throughput == pytest.approx(3.6)
+
+
+def test_k_min_memory_floor():
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.0, 2: 0.0, 3: 0.0},
+                               k_min=2)
+    assert rec.tp == 0  # only 1 survivor < k_min -> dead stage
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(0.0, 1.0), min_size=2, max_size=9),
+       st.integers(1, 2))
+def test_eq4_is_argmax(speeds, k_min):
+    group = list(range(len(speeds)))
+    sp = dict(enumerate(speeds))
+    rec = reconfigure_tp_group(group, sp, k_min=k_min)
+    survivors = [d for d in group if sp[d] > 0]
+    ks = candidate_degrees(len(survivors), k_min)
+    if not ks:
+        assert rec.tp == 0
+        return
+    # brute-force Eq. 4 over all subsets of each candidate size
+    best = 0.0
+    for k in ks:
+        for sub in itertools.combinations(survivors, k):
+            best = max(best, k * min(sp[d] for d in sub))
+    assert rec.effective_throughput == pytest.approx(best)
+    assert rec.tp in ks
+    assert bin(rec.tp).count("1") == 1  # power of two
+
+
+def test_backfill_from_standby():
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.0, 2: 1.0, 3: 1.0})
+    assert rec.standby
+    sp = {0: 1.0, 1: 0.0, 2: 0.0, 3: 1.0}  # second failure hits device 2
+    rec2 = backfill_from_standby(rec, sp)
+    assert rec2.tp == 2 and set(rec2.devices) == {0, 3}
+
+
+# --------------------------------------------------------------- §6.2 DP
+def test_paper_fig5_repartition():
+    parts = repartition_layers([1.0] * 12, [1.0, 0.5, 1.0])
+    assert [len(p) for p in parts] == [5, 2, 5]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_layers=st.integers(4, 14),
+    speeds=st.lists(st.floats(0.25, 1.0), min_size=2, max_size=4),
+)
+def test_repartition_optimal_vs_bruteforce(n_layers, speeds):
+    if n_layers < len(speeds):
+        return
+    costs = [1.0] * n_layers
+    parts = repartition_layers(costs, speeds)
+    got = partition_bottleneck(costs, parts, speeds)
+    # brute force all contiguous partitions
+    S = len(speeds)
+    best = float("inf")
+    for cuts in itertools.combinations(range(1, n_layers), S - 1):
+        bounds = [0, *cuts, n_layers]
+        p = [tuple(range(bounds[i], bounds[i + 1])) for i in range(S)]
+        best = min(best, partition_bottleneck(costs, p, speeds))
+    assert got == pytest.approx(best, rel=1e-9)
+
+
+def test_repartition_heterogeneous_costs():
+    # hybrid-style: attention layers 3x a mamba layer
+    costs = [3.0 if i % 4 == 0 else 1.0 for i in range(12)]
+    parts = repartition_layers(costs, [1.0, 1.0, 1.0])
+    assert partition_bottleneck(costs, parts, [1.0] * 3) <= sum(costs) / 3 + 3.0
+    assert [i for p in parts for i in p] == list(range(12))  # contiguous cover
+
+
+# --------------------------------------------------------- §6.3 invariants
+def _cost(cid, e):
+    return {"F": 1.0, "B": 2.0, "W": 0.5}[cid.kind]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_stages=st.integers(2, 4),
+    n_replicas=st.integers(2, 3),
+    n_mb=st.integers(2, 6),
+    dead=st.booleans(),
+    slow_stage=st.integers(0, 3),
+)
+def test_migration_completeness(n_stages, n_replicas, n_mb, dead, slow_stage):
+    """Every chunk executes exactly once regardless of failures (constraint 1
+    of the §6.3 formulation)."""
+    slow_stage = slow_stage % n_stages
+    cost = lambda cid, e: _cost(cid, e) * (2.0 if e == (0, slow_stage) else 1.0)
+    dead_ex = [(1 % n_replicas, (slow_stage + 1) % n_stages)] if dead else []
+    m = ProgressAwareMigrator(
+        n_stages=n_stages, n_replicas=n_replicas, n_microbatches=n_mb,
+        chunk_cost=cost, dead_executors=dead_ex, policy="resihp", delta=1)
+    res = m.run()
+    assert res.status == "ok"
+    assert len(m.done) == len(m.chunks)  # exactly once: done is a set
+    # nothing ran on a dead executor
+    for cid in m.done:
+        assert m._executor_of(cid) not in m.dead
+
+
+def test_migration_memory_capacity_respected():
+    m = ProgressAwareMigrator(
+        n_stages=3, n_replicas=2, n_microbatches=8, chunk_cost=_cost,
+        dead_executors=[(0, 1)], policy="resihp", mem_capacity=3)
+    res = m.run()
+    assert res.status == "ok"
+    # inflight migrated F count never exceeded capacity (tracked invariantly)
+    assert all(v >= 0 for v in m.inflight_migrated_f.values())
+
+
+def test_healthy_pipeline_no_migrations():
+    m = ProgressAwareMigrator(n_stages=4, n_replicas=2, n_microbatches=8,
+                              chunk_cost=_cost, policy="resihp", delta=1)
+    res = m.run()
+    assert res.status == "ok" and len(res.migrations) == 0
+
+
+def test_failslow_migration_beats_none():
+    slow = lambda cid, e: _cost(cid, e) * (3.0 if e == (0, 1) else 1.0)
+    r_mig = ProgressAwareMigrator(n_stages=4, n_replicas=2, n_microbatches=8,
+                                  chunk_cost=slow, policy="resihp", delta=1).run()
+    r_none = ProgressAwareMigrator(n_stages=4, n_replicas=2, n_microbatches=8,
+                                   chunk_cost=slow, policy="none").run()
+    assert r_mig.makespan < r_none.makespan
+
+
+def test_deadstage_none_aborts_resihp_survives():
+    kw = dict(n_stages=4, n_replicas=2, n_microbatches=6, chunk_cost=_cost,
+              dead_executors=[(0, 2)])
+    assert ProgressAwareMigrator(policy="none", **kw).run().status == "aborted"
+    assert ProgressAwareMigrator(policy="resihp", **kw).run().status == "ok"
+
+
+# ------------------------------------------------------------- end to end
+def test_progressive_adaptation():
+    plan = initial_plan(16, dp=2, pp=4, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 16)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[5] = 0.0  # replica 0, stage 1
+    ad = sch.adapt(plan, speeds, failed={5})
+    # TP: selective exclusion kept 2 of 4 devices
+    assert ad.plan.replicas[0].stages[1].tp == 2
+    # healthy replica untouched
+    assert ad.plan.replicas[1].stages[1].tp == 4
+    # PP: straggler stage holds fewer layers
+    n1 = ad.plan.replicas[0].stages[1].n_layers
+    assert n1 < 4
+    assert not ad.restore_required
+    assert sum(s.n_layers for s in ad.plan.replicas[0].stages) == 16
+    # standby pool retains the leftover healthy device
+    assert len(ad.plan.standby) == 1
+
+
+def test_adaptation_restore_required():
+    plan = initial_plan(8, dp=2, pp=2, tp=2)
+    sch = Scheduler(layer_costs=[1.0] * 8)
+    speeds = {d: 1.0 for d in plan.devices}
+    # kill stage 0 of BOTH replicas
+    for d in plan.replicas[0].stages[0].devices + plan.replicas[1].stages[0].devices:
+        speeds[d] = 0.0
+    ad = sch.adapt(plan, speeds)
+    assert ad.restore_required
