@@ -2,26 +2,16 @@
 ResiHP vs ReCycle, strengthened ReCycle, strengthened Oobleck."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import sim_config, write_result
+from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
 
 def run(model: str, policy: str, *, iters=300, n_events=6, seed=0):
     cfg = sim_config(model, seed=seed)
     sim = TrainingSim(policy, cfg)
-    rng = np.random.default_rng(seed + 3)
-    devices = list(range(cfg.n_devices))
-    rng.shuffle(devices)
-    span = iters * 0.8
-    for i in range(n_events):
-        t = span * (i + 1) / (n_events + 1)
-        d = devices[i]
-        if i % 2 == 0:
-            sim.inject_at(t, lambda c, now, d=d: c.fail_stop(d, now))
-        else:
-            sim.inject_at(t, lambda c, now, d=d: c.fail_slow(d, 0.45, now))
+    sim.apply_scenario(
+        scenarios.get("fig10_mixed", span=iters * 0.8, n_events=n_events))
     sim.run(iters)
     return {"throughput": sim.avg_throughput(skip=2), "aborted": sim.aborted}
 

@@ -4,9 +4,8 @@ workload migration (§6.3) on top of a ReCycle-style baseline, under mixed
 failures. Throughput normalized to ReCycle."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import sim_config, write_result
+from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
 VARIANTS = {
@@ -25,17 +24,7 @@ def run(model: str, variant: str, *, iters=250, seed=0):
     name, kw = VARIANTS[variant]
     cfg = sim_config(model, seed=seed)
     sim = TrainingSim(name, cfg, policy_kwargs=kw)
-    rng = np.random.default_rng(seed + 11)
-    devices = list(range(cfg.n_devices))
-    rng.shuffle(devices)
-    span = iters * 0.8
-    for i in range(4):
-        t = span * (i + 1) / 5
-        d = devices[i]
-        if i % 2 == 0:
-            sim.inject_at(t, lambda c, now, d=d: c.fail_stop(d, now))
-        else:
-            sim.inject_at(t, lambda c, now, d=d: c.fail_slow(d, 0.45, now))
+    sim.apply_scenario(scenarios.get("fig11_mixed", span=iters * 0.8))
     sim.run(iters)
     return sim.avg_throughput(skip=2)
 

@@ -15,7 +15,7 @@ from repro.engine.pipeline import PipelineEngine
 from repro.train.optimizer import make_optimizer
 
 
-def run(steps, inject_at=(), seed=0):
+def run(steps, fail_steps=(), seed=0):
     cfg = reduced(get_arch("qwen3-8b"), n_layers=4)  # llama-family reduced
     ds = SyntheticPackedDataset(cfg, 64, 8, seed=seed)
     opt = make_optimizer("adamw", lr=3e-3)
@@ -27,7 +27,7 @@ def run(steps, inject_at=(), seed=0):
     import jax.numpy as jnp
 
     for it in range(steps):
-        if it in inject_at:
+        if it in fail_steps:
             # kill a device from the currently-largest TP group so no stage
             # dies entirely (a dead stage needs DP migration, not this engine)
             groups = [(len(st.devices), st.devices)
@@ -48,7 +48,7 @@ def run(steps, inject_at=(), seed=0):
 def main(quick=False):
     steps = 20 if quick else 50
     base, _ = run(steps)
-    resi, reconfigs = run(steps, inject_at=(steps // 4, steps // 2))
+    resi, reconfigs = run(steps, fail_steps=(steps // 4, steps // 2))
     base, resi = np.asarray(base), np.asarray(resi)
     gap = float(np.abs(base - resi).max())
     final_gap = float(abs(base[-1] - resi[-1]))

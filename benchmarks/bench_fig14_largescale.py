@@ -4,44 +4,15 @@ ReCycle vs strengthened Oobleck. Produces the timeline trace (throughput per
 iteration + event markers)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import sim_config, write_result
+from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
-
-
-def scenario(sim: TrainingSim, span: float, seed=0):
-    rng = np.random.default_rng(seed + 17)
-    devs = list(range(sim.cfg.n_devices))
-    rng.shuffle(devs)
-    events = [
-        (0.10, "stop", devs[0]),
-        (0.22, "slow", devs[1], 0.45),
-        (0.34, "stop", devs[2]),
-        (0.45, "repair", devs[0]),
-        (0.55, "slow", devs[3], 0.3),
-        (0.66, "stop", devs[4]),
-        (0.75, "repair", devs[2]),
-        (0.85, "slow", devs[5], 0.55),
-    ]
-    for ev in events:
-        t = ev[0] * span
-        if ev[1] == "stop":
-            sim.inject_at(t, lambda c, now, d=ev[2]: c.fail_stop(d, now))
-        elif ev[1] == "slow":
-            sim.inject_at(t, lambda c, now, d=ev[2], f=ev[3]: c.fail_slow(d, f, now))
-        else:
-            def rejoin(c, now, d=ev[2], s=sim):
-                c.repair(d, now)
-                s.known_speeds[d] = 1.0
-                s._belief_dirty = True
-            sim.inject_at(t, rejoin)
 
 
 def run(policy: str, kw=None, *, iters=160, seed=0):
     cfg = sim_config("llama2-70b", n_mb=6, seed=seed)  # (4, 4, 16) = 256
     sim = TrainingSim(policy, cfg, policy_kwargs=kw or {})
-    scenario(sim, iters * 1.2, seed)
+    sim.apply_scenario(scenarios.get("fig14_largescale", span=iters * 1.2))
     sim.run(iters, stop_on_abort=False)
     trace = [
         {"iter": r.iteration, "t": round(r.t_start, 1),

@@ -3,6 +3,7 @@ ResiHP vs Greyhound vs Adaptra vs unmitigated, two pipeline scales."""
 from __future__ import annotations
 
 from benchmarks.common import sim_config, write_result
+from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
 # severities tuned so the *unmitigated* drop matches the paper's ~35/55/70%
@@ -12,7 +13,8 @@ SEVERITY = {"weak": 0.62, "medium": 0.42, "severe": 0.28}
 def run(model: str, policy: str, factor: float, *, iters=140, seed=0):
     cfg = sim_config(model, seed=seed)
     sim = TrainingSim(policy, cfg)
-    sim.inject_at(12.0, lambda c, now: c.fail_slow(5, factor, now))
+    if factor < 1.0:
+        sim.apply_scenario(scenarios.get("fig9_failslow", factor=factor))
     sim.run(iters)
     return sim.avg_throughput(skip=2)
 

@@ -3,14 +3,12 @@ ResiHP (workload filter) vs Greyhound (no filter), over many short jobs with
 fail-slow injected in ~half of them."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import sim_config, write_result
+from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
 
 def run_jobs(policy: str, *, n_jobs=12, iters=110, model="qwen2.5-7b", seed=0):
-    rng = np.random.default_rng(seed)
     fa = vals = hits = injected = filtered = 0
     overhead = 0.0
     for j in range(n_jobs):
@@ -20,12 +18,10 @@ def run_jobs(policy: str, *, n_jobs=12, iters=110, model="qwen2.5-7b", seed=0):
         inject = j % 2 == 0
         if inject:
             injected += 1
-            lo, hi = int(iters * 0.35), int(iters * 0.65)  # leave warm-up + response room
-            it_at = int(rng.integers(lo, max(hi, lo + 1)))
-            t_at = it_at * 0.8  # ~iteration period
-            dev = int(rng.integers(0, cfg.n_devices))
-            sev = float(rng.choice([0.3, 0.45, 0.6]))
-            sim.inject_at(t_at, lambda c, now, d=dev, s=sev: c.fail_slow(d, s, now))
+            # random time in the mid-session window (leave warm-up + response
+            # room), random device/severity — seeded per job (~0.8 s/iter)
+            sim.apply_scenario(scenarios.get(
+                "table5_failslow", window=(iters * 0.35 * 0.8, iters * 0.65 * 0.8)))
         sim.run(iters)
         st = sim.detector.stats
         fa += st.false_alarms

@@ -7,9 +7,8 @@ sessions => ~2-16 failures; the '30m' setting terminates workers until ~50%
 of the cluster is gone)."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import MODELS, sim_config, write_result
+from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
 FREQS = {"2h": 8, "1h": 12, "30m": 16}  # failures per session
@@ -18,15 +17,10 @@ FREQS = {"2h": 8, "1h": 12, "30m": 16}  # failures per session
 def run(model: str, policy: str, n_failures: int, *, iters=400, seed=0):
     cfg = sim_config(model, seed=seed)
     sim = TrainingSim(policy, cfg)
-    rng = np.random.default_rng(seed + 7)
-    # monotonic terminations, spread across distinct TP groups first
-    devices = list(range(cfg.n_devices))
-    rng.shuffle(devices)
-    victims = devices[: min(n_failures, cfg.n_devices // 2)]
-    span = iters * 0.8  # approx session seconds (1 iter ~ 0.8 s sim-time)
-    for i, d in enumerate(victims):
-        t = span * (i + 1) / (len(victims) + 1)
-        sim.inject_at(t, lambda c, now, d=d: c.fail_stop(d, now))
+    if n_failures:
+        # monotonic terminations over the session (1 iter ~ 0.8 s sim-time)
+        sim.apply_scenario(scenarios.get(
+            "table6_failstop", span=iters * 0.8, n_failures=n_failures))
     sim.run(iters)
     return {
         "throughput": sim.avg_throughput(skip=2),

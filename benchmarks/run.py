@@ -22,6 +22,7 @@ BENCHES = [
     ("fig13", "benchmarks.bench_fig13_overhead"),
     ("fig14", "benchmarks.bench_fig14_largescale"),
     ("kernel", "benchmarks.bench_kernel_blockskip"),
+    ("scenarios", "benchmarks.bench_scenarios"),
 ]
 
 

@@ -3,6 +3,7 @@ paper's baselines, mixed fail-stop + fail-slow (Fig. 10/14 style).
 
     PYTHONPATH=src python examples/cluster_failures.py
 """
+from repro.cluster import scenarios
 from repro.cluster.simulator import SimConfig, TrainingSim
 
 
@@ -11,13 +12,7 @@ def run(policy: str) -> TrainingSim:
                     seq_len=8192, seed=0)  # llama2-70b scale: 256 devices
     sim = TrainingSim(policy, cfg)
     # recurring mixed failures across distinct TP groups (Fig. 14 style)
-    events = [(15.0, "stop", 37), (35.0, "slow", 101, 0.45), (55.0, "stop", 5),
-              (75.0, "slow", 182, 0.3), (95.0, "stop", 201), (115.0, "slow", 66, 0.5)]
-    for ev in events:
-        if ev[1] == "stop":
-            sim.inject_at(ev[0], lambda c, now, d=ev[2]: c.fail_stop(d, now))
-        else:
-            sim.inject_at(ev[0], lambda c, now, d=ev[2], f=ev[3]: c.fail_slow(d, f, now))
+    sim.apply_scenario(scenarios.get("example_mixed"))
     sim.run(160, stop_on_abort=False)
     return sim
 

@@ -1,3 +1,5 @@
 from repro.cluster.registry import ClusterState, ClusterTopology, Device  # noqa: F401
 from repro.cluster.workload import WorkloadGen  # noqa: F401
 from repro.cluster.simulator import TrainingSim, SimConfig  # noqa: F401
+from repro.cluster.events import Event, EventTrace, apply_event  # noqa: F401
+from repro.cluster import scenarios  # noqa: F401

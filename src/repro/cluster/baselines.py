@@ -293,6 +293,9 @@ class ResiHPPolicy(BasePolicy):
     delta: int = 1
     group_rebuild_s: float = 1.8  # Fig. 13: comm-group reconstruction < 2s
     layer_transfer_s_per_layer: float = 0.35
+    # None => charge measured wall-clock planning time (Fig. 13 methodology);
+    # a float pins the charge for deterministic replay (golden tests)
+    plan_overhead_fixed: Optional[float] = None
     scheduler: Optional[Scheduler] = None
     # ablation switches (Fig. 11)
     enable_selective: bool = True
@@ -318,8 +321,10 @@ class ResiHPPolicy(BasePolicy):
                 zip(self.plan0.replicas[0].stages, ad.plan.replicas[0].stages)
             ):
                 moved_layers += len(set(new.layers) - set(old.layers))
+            plan_s = (ad.plan_overhead_s if self.plan_overhead_fixed is None
+                      else self.plan_overhead_fixed)
             overhead = (
-                ad.plan_overhead_s
+                plan_s
                 + self.group_rebuild_s
                 + moved_layers * self.layer_transfer_s_per_layer
             )

@@ -1,0 +1,114 @@
+"""Failure-event timeline: the compiled form of a FailureScenario.
+
+A scenario compiles to a flat, time-sorted list of :class:`Event` records.
+Events are plain data (kind + target + value) so a timeline can be exported,
+diffed, replayed and asserted on byte-for-byte; the one exception is the
+``callback`` kind which carries an opaque function and exists only to back
+the legacy ``TrainingSim.inject_at`` shim.
+
+Event kinds
+-----------
+``fail-stop``       device ``target`` terminates (speed 0, heartbeats stop)
+``fail-stop-node``  every device on node ``target`` terminates
+``fail-slow``       device ``target`` degrades to ``value`` x peak speed
+``net-degrade``     node ``target`` link contention, bandwidth scale ``value``
+``net-restore``     node ``target`` link contention cleared (network
+                    component only — dead/slow devices stay dead/slow)
+``rejoin``          device ``target`` repaired AND re-announced to the system
+                    (the elastic-rejoin model: the scheduler learns the device
+                    is healthy again, unlike a silent repair)
+``callback``        opaque ``fn(cluster, now)`` — inject_at compatibility
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+KINDS = (
+    "fail-stop",
+    "fail-stop-node",
+    "fail-slow",
+    "net-degrade",
+    "net-restore",
+    "rejoin",
+    "callback",
+)
+
+
+@dataclass(frozen=True, order=True)
+class Event:
+    t: float
+    kind: str
+    target: int = -1
+    value: float = 0.0
+    scenario: str = ""  # provenance: which scenario emitted this event
+    fn: Optional[Callable] = field(default=None, compare=False)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}; one of {KINDS}")
+
+    def as_tuple(self) -> tuple:
+        return (float(self.t), self.kind, int(self.target),
+                float(self.value), self.scenario)
+
+
+def apply_event(ev: Event, cluster, now: float, *, on_rejoin=None) -> None:
+    """Apply one event to a ClusterState; ``on_rejoin(device)`` lets the
+    caller propagate elastic rejoins into system beliefs."""
+    if ev.kind == "fail-stop":
+        cluster.fail_stop(ev.target, now)
+    elif ev.kind == "fail-stop-node":
+        cluster.fail_stop_node(ev.target, now)
+    elif ev.kind == "fail-slow":
+        cluster.fail_slow(ev.target, ev.value, now)
+    elif ev.kind == "net-degrade":
+        cluster.degrade_network(ev.target, ev.value, now=now)
+    elif ev.kind == "net-restore":
+        cluster.restore_network(ev.target, now=now)
+    elif ev.kind == "rejoin":
+        cluster.repair(ev.target, now)
+        if on_rejoin is not None:
+            on_rejoin(ev.target)
+    elif ev.kind == "callback":
+        ev.fn(cluster, now)
+
+
+class EventTrace:
+    """A time-sorted event timeline with export/merge/replay helpers."""
+
+    def __init__(self, events: Iterable[Event] = ()):
+        self.events: list[Event] = sorted(events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __len__(self):
+        return len(self.events)
+
+    def __getitem__(self, i):
+        return self.events[i]
+
+    def __eq__(self, other):
+        if not isinstance(other, EventTrace):
+            return NotImplemented
+        return self.events == other.events
+
+    def merge(self, other: "EventTrace") -> "EventTrace":
+        return EventTrace([*self.events, *other.events])
+
+    def as_tuples(self) -> list:
+        return [ev.as_tuple() for ev in self.events]
+
+    def to_json(self) -> str:
+        """Canonical serialization — byte-identical for identical timelines
+        (callback events are not serializable by design)."""
+        if any(ev.kind == "callback" for ev in self.events):
+            raise ValueError("callback events cannot be serialized")
+        return json.dumps(self.as_tuples(), separators=(",", ":"))
+
+    @classmethod
+    def from_json(cls, text: str) -> "EventTrace":
+        return cls(Event(t, kind, target, value, scenario)
+                   for t, kind, target, value, scenario in json.loads(text))

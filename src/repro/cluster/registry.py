@@ -18,12 +18,13 @@ from dataclasses import dataclass, field
 class Device:
     id: int
     node: int
-    speed: float = 1.0  # normalized throughput p_i
+    speed: float = 1.0  # normalized compute throughput p_i
+    net_scale: float = 1.0  # link-contention multiplier (1.0 = clean links)
     alive: bool = True
 
     @property
     def effective(self) -> float:
-        return self.speed if self.alive else 0.0
+        return self.speed * self.net_scale if self.alive else 0.0
 
 
 @dataclass(frozen=True)
@@ -79,13 +80,22 @@ class ClusterState:
     def degrade_network(self, node: int, factor: float, comm_share: float = 0.3,
                         now: float = 0.0):
         """Bandwidth contention on a node: the communication share of each
-        device's step time stretches by 1/factor."""
+        device's step time stretches by 1/factor. Tracked separately from
+        compute speed so clearing the contention restores exactly this
+        component (a co-located compute straggler stays slow)."""
         eff = 1.0 / ((1.0 - comm_share) + comm_share / max(factor, 1e-9))
         for d in self.node_devices(node):
-            self.devices[d].speed = min(self.devices[d].speed, eff)
+            self.devices[d].net_scale = min(self.devices[d].net_scale, eff)
         self.events.append((now, "net-degrade", node, factor))
+
+    def restore_network(self, node: int, now: float = 0.0):
+        """Link contention cleared: only the network component recovers —
+        dead devices stay dead, compute fail-slows stay slow."""
+        for d in self.node_devices(node):
+            self.devices[d].net_scale = 1.0
+        self.events.append((now, "net-restore", node, 1.0))
 
     def repair(self, device_id: int, now: float = 0.0):
         dev = self.devices[device_id]
-        dev.alive, dev.speed = True, 1.0
+        dev.alive, dev.speed, dev.net_scale = True, 1.0, 1.0
         self.events.append((now, "repair", device_id, 1.0))

@@ -1,0 +1,495 @@
+"""Declarative failure scenarios: a composable DSL that compiles to a seeded,
+deterministic :class:`~repro.cluster.events.EventTrace`.
+
+A :class:`FailureScenario` describes *what goes wrong and when* independently
+of any simulator instance. ``scenario.compile(topo, seed)`` produces the flat
+event timeline; ``TrainingSim.apply_scenario`` feeds it through the single
+``apply_events(t)`` hook. Scenarios compose with ``+`` (timelines merge in
+time order) and every stochastic generator derives its RNG from
+``(seed, scenario-name)`` so a sub-scenario compiles to the same events alone
+or inside a composition.
+
+Scenario catalog
+----------------
+Registered names (``scenarios.get(name, **overrides)``):
+
+======================  ====================================================
+name                    models / used by
+======================  ====================================================
+``fig9_failslow``       one compute fail-slow of tunable severity on a fixed
+                        device (paper Fig. 9 weak/medium/severe sweep);
+                        ``bench_fig9_failslow``
+``fig10_mixed``         alternating fail-stop / medium fail-slow over
+                        shuffled distinct devices (paper Fig. 10);
+                        ``bench_fig10_mixed``
+``fig11_mixed``         the 4-event mixed storm used for the component
+                        ablation (paper Fig. 11); ``bench_fig11_ablation``
+``fig14_largescale``    256-GPU recurring fail-stop + fail-slow with elastic
+                        rejoins on a fixed fractional timeline (paper
+                        Fig. 14); ``bench_fig14_largescale``
+``table5_failslow``     zero or one fail-slow at a random time/device/
+                        severity inside a detection window (paper Table 5
+                        false-alarm study); ``bench_table5_false_alarms``
+``table6_failstop``     monotonic worker terminations at fixed frequency,
+                        capped at half the cluster (paper Table 6);
+                        ``bench_table6_failstop``
+``example_mixed``       the fixed 6-event mixed storm from
+                        ``examples/cluster_failures.py``
+``rack_storm``          correlated rack failure: every device of one or more
+                        racks fail-stops in a staggered burst, with optional
+                        recovery (ByteDance-style correlated infra faults);
+                        ``bench_scenarios``
+``rack_storm_256``      ``rack_storm`` preset at Fig. 14 scale: two racks
+                        lost back-to-back, one rejoining later
+``flapping_stragglers`` transient flaps — devices bounce between dead and
+                        healthy (NIC resets, thermal throttle-recover
+                        cycles) while another straggles; ``bench_scenarios``
+``flap_then_recover``   a single device flaps repeatedly then stays healthy
+``slow_ramp_mix``       slow-ramp stragglers: several devices degrade
+                        gradually (step ramps) to different severities, some
+                        recovering — the hardest case for change-point
+                        detection; ``bench_scenarios``
+``poisson_storm``       memoryless background failure process with a
+                        fail-stop/fail-slow mix and exponential repair times
+                        (MTTF/MTTR fleet model); ``bench_scenarios``
+======================  ====================================================
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.events import Event, EventTrace
+from repro.cluster.registry import ClusterTopology
+
+__all__ = [
+    "FailureScenario", "Compose", "FailStop", "FailSlow", "TransientFlap",
+    "NetworkDegrade", "Rejoin", "MixedFailures", "RandomFailSlow",
+    "PoissonFailures", "CorrelatedRackStorm", "TimelineScenario",
+    "register", "get", "names",
+]
+
+
+# ===================================================================== base
+class FailureScenario:
+    """Base class: subclasses emit events via :meth:`events`."""
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__
+
+    def events(self, topo: ClusterTopology, rng: np.random.Generator
+               ) -> Iterable[Event]:
+        raise NotImplementedError
+
+    def compile(self, topo: ClusterTopology, seed: int = 0) -> EventTrace:
+        """Deterministic: same (topo, seed) => byte-identical timeline."""
+        return EventTrace(self.events(topo, self._rng(seed)))
+
+    def _rng(self, seed: int) -> np.random.Generator:
+        # derive from (seed, name, params): composition does not perturb a
+        # child's stream, and two same-class children with different
+        # parameters draw independent streams (dataclass repr is stable)
+        return np.random.default_rng([int(seed) & 0xFFFFFFFF,
+                                      zlib.crc32(self.name.encode()),
+                                      zlib.crc32(repr(self).encode())])
+
+    def __add__(self, other: "FailureScenario") -> "Compose":
+        return Compose([self, other])
+
+    def _ev(self, t, kind, target=-1, value=0.0) -> Event:
+        return Event(float(t), kind, int(target), float(value), self.name)
+
+
+@dataclass
+class Compose(FailureScenario):
+    """Merge child timelines in time order; children compile independently."""
+    children: Sequence[FailureScenario]
+
+    def compile(self, topo: ClusterTopology, seed: int = 0) -> EventTrace:
+        out = EventTrace()
+        for c in self.children:
+            out = out.merge(c.compile(topo, seed))
+        return out
+
+    def events(self, topo, rng):  # pragma: no cover - compile() is overridden
+        raise RuntimeError("Compose compiles via children")
+
+    def __add__(self, other: FailureScenario) -> "Compose":
+        return Compose([*self.children, other])
+
+
+# =============================================================== primitives
+@dataclass
+class FailStop(FailureScenario):
+    """Terminate a device, a whole node, or a whole rack at time ``at``."""
+    at: float
+    device: Optional[int] = None
+    node: Optional[int] = None
+    rack: Optional[int] = None  # alias for node (rack == heartbeat domain)
+
+    def events(self, topo, rng):
+        node = self.node if self.node is not None else self.rack
+        if (self.device is None) == (node is None):
+            raise ValueError("FailStop needs exactly one of device / node|rack")
+        if self.device is not None:
+            yield self._ev(self.at, "fail-stop", self.device)
+        else:
+            yield self._ev(self.at, "fail-stop-node", node)
+
+
+@dataclass
+class FailSlow(FailureScenario):
+    """Degrade a device to ``severity`` x peak at ``at``; optionally ramp the
+    degradation in steps over ``ramp`` seconds (thermal-throttle model) and
+    recover after ``duration`` seconds."""
+    device: int
+    severity: float
+    at: float
+    duration: Optional[float] = None
+    ramp: float = 0.0
+    ramp_steps: int = 4
+
+    def events(self, topo, rng):
+        if self.ramp > 0.0 and self.ramp_steps > 1:
+            for i in range(1, self.ramp_steps + 1):
+                frac = i / self.ramp_steps
+                speed = 1.0 + (self.severity - 1.0) * frac
+                t = self.at + self.ramp * (i - 1) / self.ramp_steps
+                yield self._ev(t, "fail-slow", self.device, speed)
+        else:
+            yield self._ev(self.at, "fail-slow", self.device, self.severity)
+        if self.duration is not None:
+            yield self._ev(self.at + self.duration, "rejoin", self.device)
+
+
+@dataclass
+class TransientFlap(FailureScenario):
+    """A device bounces: dead for ``down_time``, healthy for ``up_time``,
+    ``n_flaps`` times (NIC reset / kernel-driver hiccup model)."""
+    device: int
+    at: float
+    n_flaps: int = 3
+    down_time: float = 4.0
+    up_time: float = 10.0
+
+    def events(self, topo, rng):
+        t = self.at
+        for _ in range(self.n_flaps):
+            yield self._ev(t, "fail-stop", self.device)
+            yield self._ev(t + self.down_time, "rejoin", self.device)
+            t += self.down_time + self.up_time
+
+
+@dataclass
+class NetworkDegrade(FailureScenario):
+    """Bandwidth contention on a node's links: communication share of each
+    resident device stretches by 1/``link_scale``; after ``duration`` the
+    contention clears (network component only — co-located fail-stop/
+    fail-slow victims are untouched)."""
+    node: int
+    link_scale: float
+    at: float
+    duration: Optional[float] = None
+
+    def events(self, topo, rng):
+        yield self._ev(self.at, "net-degrade", self.node, self.link_scale)
+        if self.duration is not None:
+            yield self._ev(self.at + self.duration, "net-restore", self.node)
+
+
+@dataclass
+class Rejoin(FailureScenario):
+    """Repair a device and announce it healthy to the system (elastic
+    rejoin, ElasWave-style)."""
+    device: int
+    at: float
+
+    def events(self, topo, rng):
+        yield self._ev(self.at, "rejoin", self.device)
+
+
+# ======================================================= stochastic storms
+@dataclass
+class MixedFailures(FailureScenario):
+    """``n_events`` alternating fail-stop / fail-slow hits on shuffled
+    distinct devices, evenly spread over ``span`` (Fig. 10/11 storm)."""
+    span: float
+    n_events: int = 6
+    severity: float = 0.45
+    start: str = "stop"  # which kind goes first
+
+    def events(self, topo, rng):
+        devices = rng.permutation(topo.n_devices)
+        first_stop = self.start == "stop"
+        for i in range(self.n_events):
+            t = self.span * (i + 1) / (self.n_events + 1)
+            d = int(devices[i])
+            if (i % 2 == 0) == first_stop:
+                yield self._ev(t, "fail-stop", d)
+            else:
+                yield self._ev(t, "fail-slow", d, self.severity)
+
+
+@dataclass
+class MonotonicFailStops(FailureScenario):
+    """``n_failures`` permanent worker terminations at fixed frequency over
+    ``span``, never beyond half the cluster (Table 6 protocol)."""
+    span: float
+    n_failures: int
+
+    def events(self, topo, rng):
+        devices = rng.permutation(topo.n_devices)
+        victims = devices[: min(self.n_failures, topo.n_devices // 2)]
+        for i, d in enumerate(victims):
+            t = self.span * (i + 1) / (len(victims) + 1)
+            yield self._ev(t, "fail-stop", int(d))
+
+
+@dataclass
+class RandomFailSlow(FailureScenario):
+    """One fail-slow at a random time inside ``window``, random device,
+    severity drawn from ``severities`` (Table 5 injection protocol)."""
+    window: tuple
+    severities: tuple = (0.3, 0.45, 0.6)
+
+    def events(self, topo, rng):
+        lo, hi = self.window
+        t = float(rng.uniform(lo, max(hi, lo + 1e-9)))
+        d = int(rng.integers(0, topo.n_devices))
+        sev = float(rng.choice(list(self.severities)))
+        yield self._ev(t, "fail-slow", d, sev)
+
+
+@dataclass
+class PoissonFailures(FailureScenario):
+    """Memoryless background failure process: exponential inter-arrivals at
+    ``rate`` events per second over [``t_start``, ``t_end``), each event
+    fail-stop with probability ``mix`` else fail-slow with severity drawn
+    uniformly from ``severity``; repaired (elastic rejoin) after an
+    exponential repair time of mean ``mttr`` when set."""
+    rate: float
+    t_end: float
+    t_start: float = 0.0
+    mix: float = 0.5  # P(fail-stop); 1-mix => fail-slow
+    severity: tuple = (0.3, 0.6)
+    mttr: Optional[float] = None
+    max_events: int = 64
+
+    def events(self, topo, rng):
+        t, emitted = self.t_start, 0
+        pool = list(rng.permutation(topo.n_devices))
+        while emitted < self.max_events and pool:
+            t += float(rng.exponential(1.0 / max(self.rate, 1e-12)))
+            if t >= self.t_end:
+                break
+            d = int(pool.pop(0))  # distinct devices: no double-kill
+            if float(rng.uniform()) < self.mix:
+                yield self._ev(t, "fail-stop", d)
+            else:
+                sev = float(rng.uniform(*self.severity))
+                yield self._ev(t, "fail-slow", d, sev)
+            if self.mttr is not None:
+                dt = float(rng.exponential(self.mttr))
+                yield self._ev(t + dt, "rejoin", d)
+            emitted += 1
+
+
+@dataclass
+class CorrelatedRackStorm(FailureScenario):
+    """Correlated infrastructure fault: every device of ``n_racks`` racks
+    (random distinct racks unless ``racks`` pins them) fails in a staggered
+    burst — PDU/ToR-switch loss takes out co-located devices together.
+    ``kind`` picks fail-stop or fail-slow; ``recover_after`` rejoins the
+    whole rack (power restored)."""
+    at: float
+    n_racks: int = 1
+    racks: Optional[Sequence[int]] = None
+    kind: str = "fail-stop"
+    severity: float = 0.4  # only for kind == "fail-slow"
+    stagger: float = 0.5
+    recover_after: Optional[float] = None
+
+    def events(self, topo, rng):
+        racks = (list(self.racks) if self.racks is not None
+                 else [int(r) for r in
+                       rng.permutation(topo.n_nodes)[: self.n_racks]])
+        for r in racks:
+            devs = [d for d in range(topo.n_devices) if topo.node_of(d) == r]
+            for j, d in enumerate(devs):
+                t = self.at + j * self.stagger
+                if self.kind == "fail-stop":
+                    yield self._ev(t, "fail-stop", d)
+                else:
+                    yield self._ev(t, "fail-slow", d, self.severity)
+                if self.recover_after is not None:
+                    yield self._ev(self.at + self.recover_after + j * self.stagger,
+                                   "rejoin", d)
+
+
+@dataclass
+class TimelineScenario(FailureScenario):
+    """Fixed fractional timeline scaled by ``span``: entries are
+    ``(frac, kind, target[, value])`` with targets as indices into a seeded
+    device permutation when ``permute`` (Fig. 14 protocol) or literal device
+    ids otherwise."""
+    span: float
+    timeline: Sequence[tuple]
+    permute: bool = True
+    label: str = "TimelineScenario"
+
+    @property
+    def name(self) -> str:
+        return self.label
+
+    def events(self, topo, rng):
+        devs = list(rng.permutation(topo.n_devices)) if self.permute else None
+        for entry in self.timeline:
+            frac, kind = entry[0], entry[1]
+            target = int(devs[entry[2]]) if devs is not None else int(entry[2])
+            value = float(entry[3]) if len(entry) > 3 else 0.0
+            yield self._ev(frac * self.span, kind, target, value)
+
+
+# ================================================================= registry
+_REGISTRY: dict = {}
+
+
+def register(name: str) -> Callable:
+    def deco(factory: Callable) -> Callable:
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get(name: str, **overrides) -> FailureScenario:
+    """Instantiate a named scenario; ``overrides`` go to its factory."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown scenario {name!r}; known: {names()}")
+    return _REGISTRY[name](**overrides)
+
+
+def names() -> list:
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------- paper-figure scenarios
+@register("fig9_failslow")
+def _fig9(device: int = 5, factor: float = 0.42, at: float = 12.0,
+          **kw) -> FailureScenario:
+    return FailSlow(device=device, severity=factor, at=at, **kw)
+
+
+@register("fig10_mixed")
+def _fig10(span: float = 240.0, n_events: int = 6, severity: float = 0.45,
+           ) -> FailureScenario:
+    return MixedFailures(span=span, n_events=n_events, severity=severity)
+
+
+@register("fig11_mixed")
+def _fig11(span: float = 200.0, severity: float = 0.45) -> FailureScenario:
+    return MixedFailures(span=span, n_events=4, severity=severity)
+
+
+_FIG14_TIMELINE = (
+    (0.10, "fail-stop", 0),
+    (0.22, "fail-slow", 1, 0.45),
+    (0.34, "fail-stop", 2),
+    (0.45, "rejoin", 0),
+    (0.55, "fail-slow", 3, 0.3),
+    (0.66, "fail-stop", 4),
+    (0.75, "rejoin", 2),
+    (0.85, "fail-slow", 5, 0.55),
+)
+
+
+@register("fig14_largescale")
+def _fig14(span: float = 192.0) -> FailureScenario:
+    return TimelineScenario(span=span, timeline=_FIG14_TIMELINE,
+                            label="fig14_largescale")
+
+
+@register("table5_failslow")
+def _table5(window: tuple = (30.0, 60.0),
+            severities: tuple = (0.3, 0.45, 0.6)) -> FailureScenario:
+    return RandomFailSlow(window=window, severities=severities)
+
+
+@register("table6_failstop")
+def _table6(span: float = 320.0, n_failures: int = 8) -> FailureScenario:
+    return MonotonicFailStops(span=span, n_failures=n_failures)
+
+
+_EXAMPLE_TIMELINE = (
+    (15.0, "fail-stop", 37),
+    (35.0, "fail-slow", 101, 0.45),
+    (55.0, "fail-stop", 5),
+    (75.0, "fail-slow", 182, 0.3),
+    (95.0, "fail-stop", 201),
+    (115.0, "fail-slow", 66, 0.5),
+)
+
+
+@register("example_mixed")
+def _example(span: float = 1.0) -> FailureScenario:
+    # literal device ids, absolute times (span=1): the quickstart storm
+    return TimelineScenario(span=span, timeline=_EXAMPLE_TIMELINE,
+                            permute=False, label="example_mixed")
+
+
+# --------------------------------------------- new scenario families (PR 1)
+@register("rack_storm")
+def _rack_storm(at: float = 20.0, n_racks: int = 1, stagger: float = 0.5,
+                recover_after: Optional[float] = None) -> FailureScenario:
+    return CorrelatedRackStorm(at=at, n_racks=n_racks, stagger=stagger,
+                               recover_after=recover_after)
+
+
+@register("rack_storm_256")
+def _rack_storm_256(span: float = 160.0) -> FailureScenario:
+    # two racks lost back-to-back; the first comes back (power restored)
+    return (CorrelatedRackStorm(at=0.15 * span, racks=[1], stagger=0.25,
+                                recover_after=0.45 * span)
+            + CorrelatedRackStorm(at=0.35 * span, racks=[5], stagger=0.25))
+
+
+@register("flap_then_recover")
+def _flap_then_recover(device: int = 5, at: float = 15.0, n_flaps: int = 3,
+                       down_time: float = 4.0, up_time: float = 12.0,
+                       ) -> FailureScenario:
+    return TransientFlap(device=device, at=at, n_flaps=n_flaps,
+                         down_time=down_time, up_time=up_time)
+
+
+@register("flapping_stragglers")
+def _flapping_stragglers(span: float = 160.0) -> FailureScenario:
+    # two flappers in different racks plus one persistent mid straggler
+    return Compose([
+        TransientFlap(device=3, at=0.10 * span, n_flaps=3,
+                      down_time=0.02 * span, up_time=0.08 * span),
+        TransientFlap(device=12, at=0.30 * span, n_flaps=2,
+                      down_time=0.03 * span, up_time=0.10 * span),
+        FailSlow(device=7, severity=0.55, at=0.55 * span),
+    ])
+
+
+@register("slow_ramp_mix")
+def _slow_ramp_mix(span: float = 160.0) -> FailureScenario:
+    # gradual degradations of different depths; the shallow one recovers
+    return Compose([
+        FailSlow(device=2, severity=0.7, at=0.10 * span, ramp=0.15 * span,
+                 ramp_steps=4, duration=0.45 * span),
+        FailSlow(device=9, severity=0.45, at=0.35 * span, ramp=0.20 * span,
+                 ramp_steps=5),
+        FailSlow(device=14, severity=0.3, at=0.65 * span, ramp=0.10 * span,
+                 ramp_steps=3),
+    ])
+
+
+@register("poisson_storm")
+def _poisson_storm(rate: float = 0.05, t_end: float = 160.0, mix: float = 0.5,
+                   mttr: Optional[float] = 40.0) -> FailureScenario:
+    return PoissonFailures(rate=rate, t_end=t_end, mix=mix, mttr=mttr)

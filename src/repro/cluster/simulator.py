@@ -25,6 +25,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.cluster.baselines import BasePolicy, PolicyDecision, make_policy
+from repro.cluster.events import Event, apply_event
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.workload import WorkloadGen
 from repro.core.detector.changepoint import CusumDetector
@@ -121,7 +122,8 @@ class TrainingSim:
         self.now = 0.0
         self.it = 0
         self.aborted = False
-        self.failure_schedule: list = []  # (time_s, fn(cluster, now)) sorted
+        self.pending_events: list = []  # compiled Events, time-sorted
+        self.event_log: list = []  # Events already applied, in firing order
 
     # ------------------------------------------------------------ predictor
     def _fit_predictor(self) -> MicroBatchTimePredictor:
@@ -165,8 +167,9 @@ class TrainingSim:
         Greyhound's micro-benchmark pass; the cost is charged by Detector)."""
         out = []
         for d, dev in self.cluster.devices.items():
-            if dev.alive and dev.speed < 0.97 and self.known_speeds.get(d, 1.0) > dev.speed:
-                out.append((d, dev.speed))
+            p = dev.effective
+            if dev.alive and p < 0.97 and self.known_speeds.get(d, 1.0) > p:
+                out.append((d, p))
         return out
 
     # ------------------------------------------------------------- helpers
@@ -193,17 +196,41 @@ class TrainingSim:
         return out
 
     # ------------------------------------------------------------ schedule
-    def inject_at(self, time_s: float, fn: Callable):
-        """fn(cluster, now) applied once simulated time passes time_s."""
-        self.failure_schedule.append((time_s, fn))
-        self.failure_schedule.sort(key=lambda x: x[0])
+    def apply_scenario(self, scenario, *, seed: Optional[int] = None):
+        """Compile a FailureScenario (or registry name) against this sim's
+        topology and enqueue its event timeline. Returns the compiled trace."""
+        from repro.cluster.scenarios import FailureScenario, get as get_scenario
 
-    def _apply_due_injections(self):
+        if isinstance(scenario, str):
+            scenario = get_scenario(scenario)
+        assert isinstance(scenario, FailureScenario), scenario
+        trace = scenario.compile(
+            self.topo, self.cfg.seed if seed is None else seed)
+        self.pending_events = sorted([*self.pending_events, *trace])
+        return trace
+
+    def inject_at(self, time_s: float, fn: Callable):
+        """Legacy shim: fn(cluster, now) applied once simulated time passes
+        time_s. Prefer apply_scenario with a declarative FailureScenario."""
+        self.pending_events = sorted(
+            [*self.pending_events, Event(float(time_s), "callback", fn=fn)])
+
+    def _on_rejoin(self, device: int):
+        """Elastic rejoin: the repaired device announces itself, so the
+        system's belief flips back to healthy and the policy re-plans."""
+        self.known_speeds[device] = 1.0
+        self._belief_dirty = True
+
+    def apply_events(self, t: float) -> list:
+        """The single injection hook: fire every pending event with
+        ``event.t <= t`` against the cluster (and system beliefs, for
+        rejoins), appending them to ``event_log``."""
         fired = []
-        while self.failure_schedule and self.failure_schedule[0][0] <= self.now:
-            t, fn = self.failure_schedule.pop(0)
-            fn(self.cluster, self.now)
-            fired.append(t)
+        while self.pending_events and self.pending_events[0].t <= t:
+            ev = self.pending_events.pop(0)
+            apply_event(ev, self.cluster, self.now, on_rejoin=self._on_rejoin)
+            self.event_log.append(ev)
+            fired.append(ev)
         return fired
 
     # ------------------------------------------------------------ stepping
@@ -242,7 +269,7 @@ class TrainingSim:
     def step(self) -> IterRecord:
         cfg = self.cfg
         events = []
-        events += [("injection", t) for t in self._apply_due_injections()]
+        events += [("injection", ev.t) for ev in self.apply_events(self.now)]
         events += self._sync_beliefs()
 
         if self._belief_dirty or self._decision is None:

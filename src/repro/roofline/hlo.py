@@ -510,8 +510,8 @@ def _produces_f32_from_bf16(prod, symtab, comps):
     if prod.opcode == "convert" and prod.operands:
         src = symtab.get(prod.operands[0])
         return bool(src and src[0][0] == "bf16")
-    if prod.opcode == "fusion":
-        m = re.search(r"calls=%?([\w\.\-]+)", prod.attrs)
+    if prod.opcode in ("fusion", "call"):
+        m = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", prod.attrs)
         body = comps.get(m.group(1), []) if m else []
         body_sym = {o.name: o.shapes for o in body}
         for o in body:
@@ -534,11 +534,12 @@ _GLUE_OPS = {"parameter", "convert", "bitcast", "copy", "reshape", "transpose",
 
 
 def _is_dtype_glue_fusion(op, comps):
-    """True for fusions that only re-type/re-layout data between bf16 and
-    f32 — the CPU lowering materializes f32 copies of every bf16 dot operand
-    and result; the TPU MXU consumes bf16 directly with f32 accumulation, so
-    this traffic does not exist on the target."""
-    m = re.search(r"calls=%?([\w\.\-]+)", op.attrs)
+    """True for fusions (or parallel-convert calls — newer XLA lowers the
+    promotion as call ops with to_apply=) that only re-type/re-layout data
+    between bf16 and f32 — the CPU lowering materializes f32 copies of every
+    bf16 dot operand and result; the TPU MXU consumes bf16 directly with f32
+    accumulation, so this traffic does not exist on the target."""
+    m = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", op.attrs)
     body = comps.get(m.group(1), []) if m else []
     if not body or any(o.opcode not in _GLUE_OPS for o in body):
         return False
@@ -620,6 +621,9 @@ def _computation_cost(comps, name, memo, warn, body_of_while=False):
             cost.add(total)
             continue
         if oc in ("call", "custom-call"):
+            if _is_dtype_glue_fusion(op, comps):
+                charge(op, 0.0, "dtype_glue")  # fused into the MXU op on TPU
+                continue
             m = re.search(r"(?:to_apply|calls)=%?([\w\.\-]+)", op.attrs)
             if m:
                 cost.add(_computation_cost(comps, m.group(1), memo, warn))
@@ -678,7 +682,8 @@ def _computation_cost(comps, name, memo, warn, body_of_while=False):
                 prod = op_by_name.get(o)
                 if (prod is not None and symtab.get(o) and symtab[o][0][0] == "f32"
                         and (_produces_f32_from_bf16(prod, symtab, comps)
-                             or (prod.opcode == "fusion" and _is_dtype_glue_fusion(prod, comps)))):
+                             or (prod.opcode in ("fusion", "call")
+                                 and _is_dtype_glue_fusion(prod, comps)))):
                     ob *= 0.5
                 db += ob
             charge(op, db + out_b)

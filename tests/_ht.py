@@ -1,0 +1,123 @@
+"""Vendored fallback for the tiny slice of `hypothesis` the suite uses.
+
+If the real hypothesis is installed we re-export it verbatim. Otherwise the
+shim below provides ``given`` / ``settings`` / ``strategies`` over seeded
+numpy draws: each decorated test runs ``max_examples`` deterministic examples
+(seed derived from the test's qualified name and the example index), so runs
+are reproducible without the dependency.
+
+Usage in test modules::
+
+    from _ht import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    DEFAULT_MAX_EXAMPLES = 25
+
+    class SearchStrategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+        def map(self, f):
+            return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+        def filter(self, pred, *, tries: int = 100):
+            def draw(rng):
+                for _ in range(tries):
+                    x = self._draw(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate never satisfied")
+            return SearchStrategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> SearchStrategy:
+            return SearchStrategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> SearchStrategy:
+            # hypothesis includes the endpoints; make them reachable
+            def draw(rng):
+                u = float(rng.uniform(min_value, max_value))
+                edge = rng.integers(0, 10)
+                if edge == 0:
+                    return float(min_value)
+                if edge == 1:
+                    return float(max_value)
+                return u
+            return SearchStrategy(draw)
+
+        @staticmethod
+        def booleans() -> SearchStrategy:
+            return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options) -> SearchStrategy:
+            opts = list(options)
+            return SearchStrategy(
+                lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+        @staticmethod
+        def lists(elements: SearchStrategy, *, min_size: int = 0,
+                  max_size: int = 10) -> SearchStrategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+            return SearchStrategy(draw)
+
+    strategies = _Strategies()
+
+    def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+                 **_ignored):
+        def deco(fn):
+            fn._ht_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            params = [p for p in inspect.signature(fn).parameters]
+            bound = dict(zip(params, arg_strategies))
+            overlap = set(bound) & set(kw_strategies)
+            if overlap:
+                raise TypeError(f"strategy given twice for {sorted(overlap)}")
+            bound.update(kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_ht_max_examples", DEFAULT_MAX_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng([base, i])
+                    kwargs = {k: s.example(rng) for k, s in bound.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:  # noqa: BLE001 - falsify report
+                        raise AssertionError(
+                            f"falsifying example #{i}: {fn.__name__}"
+                            f"({', '.join(f'{k}={v!r}' for k, v in kwargs.items())})"
+                        ) from e
+
+            # hide the strategy params from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature()
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

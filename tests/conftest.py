@@ -4,6 +4,12 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavy jax compile/train tests; tier-1 runs -m 'not slow'")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

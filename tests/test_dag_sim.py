@@ -1,6 +1,6 @@
 """DAG pipeline simulator (Eq. 2): analytic critical-path checks."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, strategies as st
 
 from repro.core.detector.dag_sim import ChunkId, simulate_pipeline
 from repro.engine.schedules import make_schedule, one_f_one_b, zb_h1

@@ -1,7 +1,7 @@
 """Data pipeline (packing invariants, determinism) + sharding-rules engine."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, strategies as st
 
 from repro.data.packing import pack_documents, pack_stats, row_to_arrays
 from repro.data.synth import SyntheticPackedDataset

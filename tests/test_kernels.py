@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, strategies as st
 
 from repro.kernels.ops import packed_attention
 from repro.kernels.packed_flash_attn import block_metadata, skipped_block_fraction

@@ -22,6 +22,24 @@ from repro.train.train_step import build_train_step, init_train_state
 B, S = 2, 64
 
 
+def _smoke_cfg(arch_id, **overrides):
+    """Reduced config with the fewest layers that still covers every distinct
+    LayerSpec in the arch's period (gemma's 5:1 swa:full pattern would
+    otherwise force 26-34 reduced layers and minutes of XLA compile). The
+    period is truncated to that prefix so stack_for_scan's n_layers % P == 0
+    invariant holds."""
+    arch = get_arch(arch_id)
+    seen, prefix = set(), 0
+    for i, spec in enumerate(arch.period):
+        if spec not in seen:
+            seen.add(spec)
+            prefix = i + 1
+    if prefix < len(arch.period):
+        overrides.setdefault("period", arch.period[:prefix])
+    overrides.setdefault("n_layers", max(2, prefix))
+    return reduced(arch, **overrides)
+
+
 def _batch(cfg, seed=0):
     ds = SyntheticPackedDataset(cfg, S, B, seed=seed)
     batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
@@ -47,9 +65,10 @@ def _batch(cfg, seed=0):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ASSIGNED_ARCHS)
 def test_forward_shapes_finite(arch_id):
-    cfg = reduced(get_arch(arch_id))
+    cfg = _smoke_cfg(arch_id)
     params, _ = split_annotations(stacked_init(jax.random.PRNGKey(0), cfg))
     batch = _batch(cfg)
     logits, aux = forward_train(cfg, params, batch, NULL_POLICY, remat=False,
@@ -59,9 +78,10 @@ def test_forward_shapes_finite(arch_id):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ASSIGNED_ARCHS)
 def test_train_step_no_nan(arch_id):
-    cfg = reduced(get_arch(arch_id))
+    cfg = _smoke_cfg(arch_id)
     opt = make_optimizer("adamw", lr=1e-3)
     state, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
     step = build_train_step(cfg, NULL_POLICY, opt, microbatches=1, remat=False,
@@ -72,11 +92,12 @@ def test_train_step_no_nan(arch_id):
     assert float(metrics["grad_norm"]) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ["qwen3-8b", "jamba-1.5-large-398b",
                                      "xlstm-1.3b", "gemma3-1b",
                                      "whisper-medium", "qwen3-moe-30b-a3b"])
 def test_decode_step(arch_id):
-    cfg = reduced(get_arch(arch_id))
+    cfg = _smoke_cfg(arch_id)
     params, _ = split_annotations(stacked_init(jax.random.PRNGKey(0), cfg))
     params = jax.tree.map(lambda a: a.astype(jnp.bfloat16)
                           if a.dtype == jnp.float32 else a, params)
@@ -98,6 +119,19 @@ def test_decode_step(arch_id):
         for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(new_cache))
     )
     assert changed
+
+
+def test_train_step_sentinel_fast():
+    """Tier-1 sentinel: one tiny dense arch through a full train step, so the
+    model/train path keeps coverage when -m 'not slow' skips the arch sweep."""
+    cfg = _smoke_cfg("qwen3-8b")
+    opt = make_optimizer("adamw", lr=1e-3)
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = build_train_step(cfg, NULL_POLICY, opt, microbatches=1, remat=False,
+                            flash_chunk=32)
+    state, metrics = jax.jit(step)(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
 
 
 def test_prefill_then_decode_consistency():

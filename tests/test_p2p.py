@@ -1,7 +1,7 @@
 """Heterogeneous-TP P2P mapping (§7, Fig. 7): coverage, single-crossing,
 byte accounting."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, strategies as st
 
 from repro.core.scheduler.p2p import (
     chunk_slices,

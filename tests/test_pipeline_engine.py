@@ -20,6 +20,11 @@ from repro.models.model import loss_fn, stacked_init
 from repro.parallel.sharding import NULL_POLICY, split_annotations
 from repro.train.optimizer import make_optimizer
 
+# every test here compiles multi-stage jax pipelines (12-33 s apiece); the
+# tier-1 suite covers the same scheduler/migration logic through the numpy
+# simulator and golden tests
+pytestmark = pytest.mark.slow
+
 CFG = reduced(get_arch("qwen3-8b"), n_layers=4)
 
 

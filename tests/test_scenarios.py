@@ -1,0 +1,236 @@
+"""Failure-scenario DSL: deterministic compilation, composition, correlated
+rack locality, registry coverage and the legacy inject_at shim."""
+import json
+
+import pytest
+
+from repro.cluster import scenarios
+from repro.cluster.events import Event, EventTrace
+from repro.cluster.registry import ClusterState, ClusterTopology
+from repro.cluster.scenarios import (
+    Compose,
+    CorrelatedRackStorm,
+    FailSlow,
+    FailStop,
+    MixedFailures,
+    NetworkDegrade,
+    PoissonFailures,
+    TransientFlap,
+)
+from repro.cluster.simulator import SimConfig, TrainingSim
+
+TOPO = ClusterTopology(8, 8)  # 64 devices
+
+SMALL = SimConfig(dp=2, pp=2, tp=2, n_layers=8, n_microbatches=4,
+                  seq_len=2048, noise=0.0)
+
+
+# ------------------------------------------------------------- determinism
+@pytest.mark.parametrize("name", [
+    "fig10_mixed", "fig14_largescale", "table6_failstop", "rack_storm",
+    "flapping_stragglers", "slow_ramp_mix", "poisson_storm",
+])
+def test_compile_deterministic(name):
+    """Same seed => byte-identical compiled event trace."""
+    a = scenarios.get(name).compile(TOPO, seed=7).to_json()
+    b = scenarios.get(name).compile(TOPO, seed=7).to_json()
+    assert a == b
+    assert a.encode() == b.encode()  # byte-identical serialization
+
+
+def test_different_seeds_differ():
+    s = scenarios.get("poisson_storm")
+    assert s.compile(TOPO, 0).to_json() != s.compile(TOPO, 1).to_json()
+
+
+def test_trace_roundtrip():
+    tr = scenarios.get("fig10_mixed").compile(TOPO, 3)
+    back = EventTrace.from_json(tr.to_json())
+    assert back == tr and back.to_json() == tr.to_json()
+
+
+def test_registry_names_cover_catalog():
+    known = set(scenarios.names())
+    for required in ("fig9_failslow", "fig10_mixed", "fig11_mixed",
+                     "fig14_largescale", "table5_failslow", "table6_failstop",
+                     "rack_storm", "rack_storm_256", "flapping_stragglers",
+                     "flap_then_recover", "slow_ramp_mix", "poisson_storm"):
+        assert required in known
+    with pytest.raises(KeyError):
+        scenarios.get("no_such_scenario")
+
+
+# ------------------------------------------------------------- composition
+def test_compose_merges_in_time_order():
+    a = FailStop(at=30.0, device=1)
+    b = FailSlow(device=2, severity=0.5, at=10.0)
+    tr = (a + b).compile(TOPO, 0)
+    times = [ev.t for ev in tr]
+    assert times == sorted(times)
+    assert tr[0].kind == "fail-slow" and tr[1].kind == "fail-stop"
+
+
+def test_compose_preserves_child_timelines():
+    """A child compiles to the same events alone or inside a composition."""
+    storm = MixedFailures(span=100.0, n_events=4)
+    flap = TransientFlap(device=3, at=5.0, n_flaps=2)
+    alone = storm.compile(TOPO, 11).as_tuples()
+    composed = Compose([flap, storm]).compile(TOPO, 11).as_tuples()
+    assert [e for e in composed if e[4] == "MixedFailures"] == alone
+
+
+def test_compose_same_class_children_draw_independent_streams():
+    """Two stochastic children of the same class must not mirror each other's
+    random draws (device permutations would collide)."""
+    a = MixedFailures(span=100.0, n_events=4)
+    b = MixedFailures(span=200.0, n_events=4)
+    tr = Compose([a, b]).compile(TOPO, 0)
+    hits_a = [ev.target for ev in tr if ev.t <= 100.0 * 4 / 5]
+    hits_b = [ev.target for ev in tr if ev.t > 100.0 * 4 / 5]
+    assert hits_a != hits_b  # same devices in the same order = shared stream
+
+
+def test_compose_chains():
+    s = FailStop(at=1.0, device=0) + FailStop(at=2.0, device=1) \
+        + FailStop(at=3.0, device=2)
+    assert isinstance(s, Compose) and len(s.children) == 3
+    assert len(s.compile(TOPO, 0)) == 3
+
+
+# ----------------------------------------------------- rack-storm locality
+def test_rack_storm_hits_exactly_colocated_devices():
+    storm = CorrelatedRackStorm(at=10.0, racks=[3], stagger=0.5)
+    tr = storm.compile(TOPO, 0)
+    hit = sorted(ev.target for ev in tr if ev.kind == "fail-stop")
+    expected = [d for d in range(TOPO.n_devices) if TOPO.node_of(d) == 3]
+    assert hit == expected
+    assert all(TOPO.node_of(ev.target) == 3 for ev in tr)
+
+
+def test_rack_storm_random_rack_is_colocated_and_seeded():
+    storm = CorrelatedRackStorm(at=5.0, n_racks=2)
+    tr = storm.compile(TOPO, 4)
+    racks = {TOPO.node_of(ev.target) for ev in tr}
+    assert len(racks) == 2
+    per_rack = {r: [ev for ev in tr if TOPO.node_of(ev.target) == r]
+                for r in racks}
+    for r, evs in per_rack.items():
+        assert len(evs) == TOPO.devices_per_node  # whole rack, nothing else
+    assert tr.to_json() == storm.compile(TOPO, 4).to_json()
+
+
+def test_rack_storm_recovery_rejoins_every_victim():
+    storm = CorrelatedRackStorm(at=10.0, racks=[0], recover_after=20.0)
+    tr = storm.compile(TOPO, 0)
+    down = {ev.target for ev in tr if ev.kind == "fail-stop"}
+    up = {ev.target for ev in tr if ev.kind == "rejoin"}
+    assert down == up
+
+
+# ----------------------------------------------------------- event effects
+def test_flap_restores_cluster_state():
+    topo = ClusterTopology(2, 4)
+    cluster = ClusterState(topo)
+    tr = TransientFlap(device=2, at=1.0, n_flaps=2, down_time=1.0,
+                       up_time=2.0).compile(topo, 0)
+    from repro.cluster.events import apply_event
+
+    for ev in tr:
+        apply_event(ev, cluster, ev.t)
+    assert cluster.devices[2].alive and cluster.devices[2].speed == 1.0
+    kinds = [e[1] for e in cluster.events]
+    assert kinds == ["fail-stop", "repair", "fail-stop", "repair"]
+
+
+def test_network_degrade_applies_and_restores_only_link_component():
+    """net-degrade scales the comm share of every resident device; clearing
+    it must not resurrect a dead device or heal a compute straggler."""
+    from repro.cluster.events import apply_event
+
+    topo = ClusterTopology(2, 4)
+    cluster = ClusterState(topo)
+    cluster.fail_stop(1)
+    cluster.fail_slow(2, 0.5)
+    tr = NetworkDegrade(node=0, link_scale=0.5, at=10.0,
+                        duration=20.0).compile(topo, 0)
+    assert [ev.kind for ev in tr] == ["net-degrade", "net-restore"]
+    apply_event(tr[0], cluster, 10.0)
+    # comm_share=0.3 at half bandwidth: 1/((1-.3)+.3/.5) = 1/1.3
+    assert cluster.devices[0].effective == pytest.approx(1 / 1.3)
+    assert cluster.devices[2].effective == pytest.approx(0.5 / 1.3)
+    assert cluster.devices[1].effective == 0.0  # dead stays dead
+    assert cluster.devices[4].effective == 1.0  # other node untouched
+    apply_event(tr[1], cluster, 30.0)
+    assert cluster.devices[0].effective == 1.0
+    assert not cluster.devices[1].alive  # restore is network-only
+    assert cluster.devices[2].effective == pytest.approx(0.5)  # still slow
+
+
+def test_slow_ramp_monotone_degradation():
+    ramp = FailSlow(device=1, severity=0.4, at=10.0, ramp=8.0, ramp_steps=4)
+    tr = ramp.compile(TOPO, 0)
+    speeds = [ev.value for ev in tr if ev.kind == "fail-slow"]
+    assert len(speeds) == 4
+    assert speeds == sorted(speeds, reverse=True)  # monotone ramp down
+    assert speeds[-1] == pytest.approx(0.4)
+
+
+def test_poisson_storm_distinct_devices_with_repairs():
+    storm = PoissonFailures(rate=0.5, t_end=100.0, mttr=10.0)
+    tr = storm.compile(TOPO, 9)
+    fails = [ev for ev in tr if ev.kind in ("fail-stop", "fail-slow")]
+    assert len(fails) > 0
+    targets = [ev.target for ev in fails]
+    assert len(targets) == len(set(targets))  # no double-kill
+    rejoins = {ev.target for ev in tr if ev.kind == "rejoin"}
+    assert rejoins == set(targets)
+
+
+# --------------------------------------------------------- simulator wiring
+def test_apply_scenario_fires_events_in_sim():
+    sim = TrainingSim("resihp", SMALL)
+    tr = sim.apply_scenario(FailSlow(device=3, severity=0.5, at=0.1))
+    assert len(tr) == 1 and len(sim.pending_events) == 1
+    sim.run(12)
+    assert not sim.pending_events
+    assert [ev.kind for ev in sim.event_log] == ["fail-slow"]
+    assert sim.cluster.devices[3].speed == pytest.approx(0.5)
+
+
+def test_apply_scenario_by_name_and_seed_determinism():
+    sims = [TrainingSim("resihp", SMALL) for _ in range(2)]
+    traces = [s.apply_scenario("fig10_mixed", seed=5) for s in sims]
+    assert traces[0].to_json() == traces[1].to_json()
+
+
+def test_rejoin_event_updates_system_belief():
+    sim = TrainingSim("resihp", SMALL)
+    sim.apply_scenario(FailStop(at=0.1, device=3)
+                       + scenarios.Rejoin(device=3, at=1.0))
+    sim.run(80)
+    assert sim.cluster.devices[3].alive
+    assert sim.known_speeds[3] == 1.0  # belief restored, not just hardware
+    kinds = [ev.kind for ev in sim.event_log]
+    assert kinds == ["fail-stop", "rejoin"]
+
+
+def test_inject_at_shim_still_works():
+    sim = TrainingSim("resihp", SMALL)
+    sim.inject_at(0.1, lambda c, now: c.fail_slow(1, 0.6, now))
+    sim.run(12)
+    assert sim.cluster.devices[1].speed == pytest.approx(0.6)
+    assert [ev.kind for ev in sim.event_log] == ["callback"]
+
+
+def test_callback_trace_not_serializable():
+    tr = EventTrace([Event(1.0, "callback", fn=lambda c, now: None)])
+    with pytest.raises(ValueError):
+        tr.to_json()
+
+
+def test_event_trace_export_is_json():
+    tr = scenarios.get("table6_failstop", n_failures=4).compile(TOPO, 0)
+    rows = json.loads(tr.to_json())
+    assert len(rows) == 4
+    for t, kind, target, value, scen in rows:
+        assert kind == "fail-stop" and 0 <= target < TOPO.n_devices

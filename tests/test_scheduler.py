@@ -3,7 +3,7 @@ brute force), §6.3 migration invariants, end-to-end progressive adaptation."""
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _ht import given, settings, strategies as st
 
 from repro.core.scheduler.migration import ProgressAwareMigrator
 from repro.core.scheduler.plan import initial_plan

@@ -1,0 +1,93 @@
+"""Golden regression: a small simulator run under a named scenario must
+reproduce the checked-in event trace and throughput exactly.
+
+Guards the ClusterSimulator/scenario refactor: any change to event
+compilation, firing order, detection latency or throughput accounting shows
+up as a diff against ``tests/golden/simulator_golden.json``.
+
+Regenerate (after an *intentional* behavior change) with:
+
+    PYTHONPATH=src:tests python -c "import test_simulator_golden as g; g.regenerate()"
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import scenarios
+from repro.cluster.simulator import SimConfig, TrainingSim
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "simulator_golden.json"
+
+CFG = SimConfig(dp=2, pp=2, tp=2, n_layers=8, n_microbatches=4,
+                seq_len=2048, noise=0.01, seed=0)
+SCENARIO = "fig10_mixed"
+SPAN = 3.0
+ITERS = 60
+# pin the one wall-clock-measured quantity (planning time, Fig. 13) so the
+# whole run — including now-timestamps — is machine-independent
+POLICY_KW = dict(plan_overhead_fixed=0.25)
+
+
+def _run():
+    sim = TrainingSim("resihp", CFG, policy_kwargs=POLICY_KW)
+    compiled = sim.apply_scenario(scenarios.get(SCENARIO, span=SPAN))
+    sim.run(ITERS, stop_on_abort=False)
+    return sim, compiled
+
+
+def _observed(sim, compiled) -> dict:
+    return {
+        "scenario": SCENARIO,
+        "compiled_events": compiled.as_tuples(),
+        "fired_events": [ev.as_tuple() for ev in sim.event_log],
+        "cluster_log": [[t, kind, int(target), float(value)]
+                        for t, kind, target, value in sim.cluster.events],
+        "n_iters": len(sim.trace),
+        "aborted": sim.aborted,
+        "avg_throughput": sim.avg_throughput(skip=2),
+        "durations": [r.duration for r in sim.trace],
+        "iter_events": [[e[0] for e in r.events] for r in sim.trace],
+    }
+
+
+def regenerate():
+    sim, compiled = _run()
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(_observed(sim, compiled), indent=1))
+    print(f"wrote {GOLDEN_PATH}")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert GOLDEN_PATH.exists(), "golden missing - run regenerate()"
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.fixture(scope="module")
+def observed():
+    sim, compiled = _run()
+    # JSON-normalize (tuples -> lists) so comparisons are type-stable
+    return json.loads(json.dumps(_observed(sim, compiled)))
+
+
+def test_compiled_event_trace_matches_golden(golden, observed):
+    assert observed["compiled_events"] == golden["compiled_events"]
+
+
+def test_fired_events_match_golden(golden, observed):
+    assert observed["fired_events"] == golden["fired_events"]
+    assert observed["cluster_log"] == golden["cluster_log"]
+
+
+def test_iteration_shape_matches_golden(golden, observed):
+    assert observed["n_iters"] == golden["n_iters"]
+    assert observed["aborted"] == golden["aborted"]
+    assert observed["iter_events"] == golden["iter_events"]
+
+
+def test_throughput_matches_golden(golden, observed):
+    assert observed["avg_throughput"] == pytest.approx(
+        golden["avg_throughput"], rel=1e-9)
+    assert observed["durations"] == pytest.approx(
+        golden["durations"], rel=1e-9)
