@@ -1,19 +1,35 @@
 """Fig. 14: 256-GPU large-scale run — LLaMA2-70B, (TP,DP,PP)=(4,4,16),
 recurring fail-stop + fail-slow failures and re-joins; ResiHP vs strengthened
 ReCycle vs strengthened Oobleck. Produces the timeline trace (throughput per
-iteration + event markers)."""
+iteration + event markers).
+
+Beyond the paper's 256-GPU point, ``--devices`` sweeps the same protocol at
+1024/2048/4096 devices (Table-3 ``1k``/``2k``/``4k`` presets); ``--engine``
+picks the simulator core (the ``fast`` default is the only practical choice
+at 1k+ — see ``BENCH_simcore.json``):
+
+    PYTHONPATH=src python -m benchmarks.bench_fig14_largescale \
+        --engine fast --devices 1024,2048 [--quick]
+"""
 from __future__ import annotations
 
-from benchmarks.common import sim_config, write_result
+from benchmarks.common import Timer, sim_config, write_result
 from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
+# device count -> Table-3 scale preset (all share llama2-70b layer costs)
+SCALES = {256: "xlarge", 1024: "1k", 2048: "2k", 4096: "4k"}
 
-def run(policy: str, kw=None, *, iters=160, seed=0):
-    cfg = sim_config("llama2-70b", n_mb=6, seed=seed)  # (4, 4, 16) = 256
-    sim = TrainingSim(policy, cfg, policy_kwargs=kw or {})
+
+def run(policy: str, kw=None, *, iters=160, seed=0, engine="fast",
+        devices=256):
+    scale = SCALES[devices]
+    cfg = sim_config("llama2-70b", n_mb=6, seed=seed, scale=scale)
+    assert cfg.n_devices == devices, (cfg.n_devices, devices)
+    sim = TrainingSim(policy, cfg, policy_kwargs=kw or {}, engine=engine)
     sim.apply_scenario(scenarios.get("fig14_largescale", span=iters * 1.2))
-    sim.run(iters, stop_on_abort=False)
+    with Timer() as t:
+        sim.run(iters, stop_on_abort=False)
     trace = [
         {"iter": r.iteration, "t": round(r.t_start, 1),
          "thpt": round(r.throughput, 3),
@@ -23,29 +39,46 @@ def run(policy: str, kw=None, *, iters=160, seed=0):
     return {
         "avg_throughput": sim.avg_throughput(skip=2),
         "aborted": sim.aborted,
+        "engine": engine,
+        "devices": devices,
+        "wall_s": round(t.seconds, 2),
         "trace": trace,
         "detector": sim.detector.stats.as_dict(),
     }
 
 
-def main(quick=False):
+def main(quick=False, engine="fast", devices=(256,)):
     iters = 60 if quick else 160
     out, rows = {}, []
-    for policy in ("resihp", "recycle+", "oobleck+"):
-        r = run(policy, iters=iters)
-        out[policy] = r
-        rows.append((f"fig14/{policy}/avg_throughput",
-                     round(r["avg_throughput"], 2),
-                     f"aborted={r['aborted']}"))
-    resi = out["resihp"]["avg_throughput"]
-    for p in ("recycle+", "oobleck+"):
-        rows.append((f"fig14/speedup_over_{p}",
-                     round(resi / max(out[p]["avg_throughput"], 1e-9), 2), ""))
+    for dv in devices:
+        tag = "fig14" if dv == 256 else f"fig14@{dv}"
+        per_policy = {}
+        for policy in ("resihp", "recycle+", "oobleck+"):
+            r = run(policy, iters=iters, engine=engine, devices=dv)
+            per_policy[policy] = r
+            out[f"{tag}/{policy}" if dv != 256 else policy] = r
+            rows.append((f"{tag}/{policy}/avg_throughput",
+                         round(r["avg_throughput"], 2),
+                         f"aborted={r['aborted']} wall={r['wall_s']}s"))
+        resi = per_policy["resihp"]["avg_throughput"]
+        for p in ("recycle+", "oobleck+"):
+            rows.append((f"{tag}/speedup_over_{p}",
+                         round(resi / max(per_policy[p]["avg_throughput"], 1e-9), 2),
+                         ""))
     write_result("fig14_largescale", out)
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--engine", choices=("python", "fast"), default="fast")
+    ap.add_argument("--devices", default="256",
+                    help=f"comma-separated subset of {sorted(SCALES)}")
+    args = ap.parse_args()
+    devices = tuple(int(d) for d in args.devices.split(","))
+    emit(main(quick=args.quick, engine=args.engine, devices=devices))

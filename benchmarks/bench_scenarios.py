@@ -28,9 +28,10 @@ SWEEP = {
 POLICIES = ("resihp", "recycle+", "oobleck+")
 
 
-def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0):
-    cfg = sim_config(model, seed=seed)
-    sim = TrainingSim(policy, cfg)
+def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
+        engine="fast", scale=None):
+    cfg = sim_config(model, seed=seed, scale=scale)
+    sim = TrainingSim(policy, cfg, engine=engine)
     span = iters * 0.8
     trace = sim.apply_scenario(SWEEP[scenario_name](span))
     sim.run(iters, stop_on_abort=False)
@@ -42,13 +43,14 @@ def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0):
     }
 
 
-def main(quick=False):
+def main(quick=False, engine="fast"):
     models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
     iters = 80 if quick else 160
     out, rows = {}, []
     for model in models:
         for sc in SWEEP:
-            rs = {p: run(model, sc, p, iters=iters) for p in POLICIES}
+            rs = {p: run(model, sc, p, iters=iters, engine=engine)
+                  for p in POLICIES}
             out[f"{model}/{sc}"] = rs
             resi = rs["resihp"]["throughput"]
             for p, r in rs.items():
@@ -63,6 +65,12 @@ def main(quick=False):
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--engine", choices=("python", "fast"), default="fast")
+    args = ap.parse_args()
+    emit(main(quick=args.quick, engine=args.engine))

@@ -23,6 +23,7 @@ BENCHES = [
     ("fig14", "benchmarks.bench_fig14_largescale"),
     ("kernel", "benchmarks.bench_kernel_blockskip"),
     ("scenarios", "benchmarks.bench_scenarios"),
+    ("simcore", "benchmarks.bench_simcore"),
 ]
 
 

@@ -1,0 +1,526 @@
+"""Fast execution core for the cluster simulator (the ``engine="fast"`` path).
+
+Semantically exact, asymptotically faster re-implementation of
+:class:`repro.core.scheduler.migration.ProgressAwareMigrator` plus a
+vectorized chunk-cost table. The reference engine is kept untouched as the
+semantic anchor; this module exists purely so that Fig. 14-style sweeps scale
+to 1k+ devices (ROADMAP "Scale" item). Three structural wins, none of which
+changes observable behaviour:
+
+1. **Targeted dispatch.** The reference engine re-dispatches *every* executor
+   after *every* completion batch — O(chunks x executors) work dominated by
+   redundant readiness probes (at 256 devices: ~78k dispatch calls per
+   iteration for ~1.5k events). Completions can only unblock (a) the executor
+   that finished, (b) executors owning a dependent of the finished chunk,
+   (c) migration sources/destinations and (d) executors with an explicit
+   wake-up — so only those are dispatched. Same starts, same times.
+2. **Incremental Algorithm-1 state.** The reference recomputes the progress
+   matrix P from the full ``done`` set on every decide (O(chunks) each, so
+   O(chunks^2) per iteration) and scans all stages. Here P is maintained
+   incrementally; per-stage min/max are updated in O(1) amortized per F
+   completion (counts only ever increment by one, so the stage minimum moves
+   by at most one when its last holder leaves), and the decide body runs only
+   over stages that can possibly act: the "hot" set (progress gap > delta)
+   plus stages with fail-stop executors. Stages outside that set provably
+   hit a ``continue`` in the reference loop.
+3. **Static-structure cache.** Schedules, the chunk index, dependency and
+   reverse-dependency lists depend only on (schedule, stages, micro-batches,
+   replicas) — they are built once and shared across iterations instead of
+   being rebuilt from ChunkId dataclasses every ``step()``.
+
+Differences from the reference that are *not* observable through
+``TrainingSim``: ``SimResult.idle`` is returned empty (the reference
+recomputes every chunk cost at the end of a run just to report idle time;
+nothing in the simulator reads it), and the set-iteration order inside the
+``detail`` string of an aborted result may differ.
+
+Bit-for-bit parity is enforced by ``tests/test_simulator_golden.py`` (the
+fast engine is the default) and ``tests/test_engine_parity.py`` (python vs
+fast across scenario families and policies).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+
+import numpy as np
+
+from repro.core.detector.dag_sim import ChunkId
+from repro.core.scheduler.migration import MigrationEvent, SimResult
+from repro.engine.schedules import make_schedule
+
+_KIND_F, _KIND_B, _KIND_W = 0, 1, 2
+_KIND_INDEX = {"F": _KIND_F, "B": _KIND_B, "W": _KIND_W}
+
+
+# ===================================================== static schedule graph
+class _Struct:
+    """Immutable per-(schedule, stages, n_mb, replicas) execution graph,
+    shared across iterations: integer-indexed chunks, per-executor orders,
+    dependency/reverse-dependency lists and F -> B/W companion links."""
+
+    __slots__ = (
+        "n_stages", "n_replicas", "n_chunks", "executors", "e_replica",
+        "orders", "cids", "kind", "mb", "stage", "replica", "home",
+        "deps", "rdeps", "comp_b", "comp_w",
+    )
+
+    def __init__(self, schedule: str, n_stages: int, n_mb, n_replicas: int):
+        self.n_stages = n_stages
+        self.n_replicas = n_replicas
+        self.executors = [(d, s) for d in range(n_replicas)
+                          for s in range(n_stages)]
+        self.e_replica = [d for d, _ in self.executors]
+        eidx = {e: i for i, e in enumerate(self.executors)}
+
+        cids: list = []
+        index: dict = {}
+        self.orders = [[] for _ in self.executors]
+        for d in range(n_replicas):
+            sched = make_schedule(schedule, n_stages, n_mb[d], replica=d)
+            for (rep, st), order in sched.items():
+                lst = self.orders[eidx[(rep, st)]]
+                for cid in order:
+                    i = index.get(cid)
+                    if i is None:
+                        i = index[cid] = len(cids)
+                        cids.append(cid)
+                    lst.append(i)
+        self.n_chunks = len(cids)
+        self.cids = cids
+        self.kind = [_KIND_INDEX[c.kind] for c in cids]
+        self.mb = [c.mb for c in cids]
+        self.stage = [c.stage for c in cids]
+        self.replica = [c.replica for c in cids]
+        self.home = [eidx[(c.replica, c.stage)] for c in cids]
+
+        # deps mirror ProgressAwareMigrator._deps (filtered to known chunks);
+        # the static edge flag records whether the dep crosses stages (p2p)
+        self.deps = [[] for _ in cids]
+        self.rdeps = [[] for _ in cids]
+        self.comp_b = [-1] * len(cids)
+        self.comp_w = [-1] * len(cids)
+        for i, c in enumerate(cids):
+            if c.kind == "F":
+                if c.stage > 0:
+                    d = index.get(ChunkId("F", c.mb, c.stage - 1, c.replica))
+                    if d is not None:
+                        self.deps[i].append((d, True))
+                b = index.get(ChunkId("B", c.mb, c.stage, c.replica))
+                if b is not None:
+                    self.comp_b[i] = b
+                w = index.get(ChunkId("W", c.mb, c.stage, c.replica))
+                if w is not None:
+                    self.comp_w[i] = w
+            elif c.kind == "B":
+                d = index.get(ChunkId("F", c.mb, c.stage, c.replica))
+                if d is not None:
+                    self.deps[i].append((d, False))
+                if c.stage < n_stages - 1:
+                    d = index.get(ChunkId("B", c.mb, c.stage + 1, c.replica))
+                    if d is not None:
+                        self.deps[i].append((d, True))
+            else:  # W
+                d = index.get(ChunkId("B", c.mb, c.stage, c.replica))
+                if d is not None:
+                    self.deps[i].append((d, False))
+        for i in range(len(cids)):
+            for d, _ in self.deps[i]:
+                self.rdeps[d].append(i)
+
+
+_STRUCT_CACHE: dict = {}
+_STRUCT_CACHE_MAX = 64
+
+
+def _struct_for(schedule: str, n_stages: int, n_mb, n_replicas: int) -> _Struct:
+    key = (schedule, n_stages, tuple(n_mb), n_replicas)
+    s = _STRUCT_CACHE.get(key)
+    if s is None:
+        if len(_STRUCT_CACHE) >= _STRUCT_CACHE_MAX:
+            _STRUCT_CACHE.clear()
+        s = _STRUCT_CACHE[key] = _Struct(schedule, n_stages, n_mb, n_replicas)
+    return s
+
+
+# ============================================================ fast migrator
+class FastMigrator:
+    """Drop-in replacement for ProgressAwareMigrator (same constructor, same
+    ``run() -> SimResult``), returning identical makespans, migrations,
+    statuses and finish times — see the module docstring for what is faster
+    and the two non-observable differences."""
+
+    def __init__(
+        self,
+        *,
+        n_stages: int,
+        n_replicas: int,
+        n_microbatches,
+        chunk_cost,
+        schedule: str = "1f1b",
+        dead_executors=(),
+        policy: str = "resihp",
+        delta: int = 0,
+        mem_capacity=None,
+        p2p_cost: float = 0.0,
+        migrate_edge_cost: float = 0.0,
+        max_migrations_per_event: int = 4,
+    ):
+        self.n_stages = n_stages
+        self.n_replicas = n_replicas
+        if isinstance(n_microbatches, int):
+            n_microbatches = [n_microbatches] * n_replicas
+        self.n_mb = list(n_microbatches)
+        self.chunk_cost = chunk_cost
+        self.policy = policy
+        self.delta = delta
+        self.mem_capacity = mem_capacity if mem_capacity is not None else n_stages + 2
+        self.p2p_cost = p2p_cost
+        self.migrate_edge_cost = migrate_edge_cost
+        self.dead = set(dead_executors)
+        self.max_migrations_per_event = max_migrations_per_event
+
+        st = self.st = _struct_for(schedule, n_stages, self.n_mb, n_replicas)
+        n = st.n_chunks
+        self._dead_e = {d * n_stages + s for (d, s) in self.dead
+                        if 0 <= s < n_stages and 0 <= d < n_replicas}
+        self._dead_stages = sorted({s for (_, s) in self.dead
+                                    if 0 <= s < n_stages})
+
+        # dynamic state
+        self.placement = [-1] * n  # executor idx, -1 = home
+        self.finish = [None] * n
+        self.started = [False] * n
+        self.done = [False] * n
+        self.migrated_away = [False] * n
+        self.n_done_chunks = 0
+        E = len(st.executors)
+        self.live = [0] * E
+        self.inflight = [0] * E
+        self.migq = [[] for _ in range(E)]
+        self.cursor = [0] * E
+        self.pend_cursor = [0] * E
+        self.running = [None] * E
+        self.migrations: list = []
+        self._rr = 0
+        # Algorithm-1 progress state: P[d][i], per-stage min/max and hot set
+        self._P = [[0] * n_stages for _ in range(n_replicas)]
+        self._minval = [0] * n_stages
+        self._n_at_min = [n_replicas] * n_stages
+        self._maxval = [0] * n_stages
+        self._hot: set = set()
+        self._max_finish = None
+        self._pr_finish = [0.0] * n_replicas
+
+    # ------------------------------------------------------------- helpers
+    def _executor_of(self, i: int) -> int:
+        p = self.placement[i]
+        return p if p >= 0 else self.st.home[i]
+
+    def _ready_time(self, i: int):
+        t = 0.0
+        finish = self.finish
+        for d, crosses_stage in self.st.deps[i]:
+            f = finish[d]
+            if f is None:
+                return None
+            ed, ec = self._executor_of(d), self._executor_of(i)
+            if ed != ec:
+                c = self.p2p_cost if crosses_stage else 0.0
+                if self.st.e_replica[ed] != self.st.e_replica[ec]:
+                    c += self.migrate_edge_cost
+                f = f + c
+            if f > t:
+                t = f
+        return t
+
+    def _inc_progress(self, d: int, i: int):
+        """P[d][i] += 1 with O(1) amortized min/max/hot maintenance (values
+        only ever increment, so the minimum can only move up by one when its
+        last holder leaves)."""
+        row = self._P[d]
+        old = row[i]
+        row[i] = old + 1
+        if old + 1 > self._maxval[i]:
+            self._maxval[i] = old + 1
+        if old == self._minval[i]:
+            self._n_at_min[i] -= 1
+            if self._n_at_min[i] == 0:
+                m = old + 1
+                self._minval[i] = m
+                self._n_at_min[i] = sum(
+                    1 for dd in range(self.n_replicas) if self._P[dd][i] == m)
+        if self._maxval[i] - self._minval[i] > self.delta:
+            self._hot.add(i)
+        else:
+            self._hot.discard(i)
+
+    def _next_pending(self, d: int, i: int):
+        """First F chunk of executor (d, i) neither started nor migrated.
+        Entries skipped are permanently ineligible, so the scan cursor is
+        monotone (the reference rescans from the start every call)."""
+        e = d * self.n_stages + i
+        order = self.st.orders[e]
+        kind, started, migrated = self.st.kind, self.started, self.migrated_away
+        k = self.pend_cursor[e]
+        while k < len(order):
+            c = order[k]
+            if kind[c] == _KIND_F and not started[c] and not migrated[c]:
+                self.pend_cursor[e] = k
+                return c
+            k += 1
+        self.pend_cursor[e] = k
+        return None
+
+    def _mem_feasible(self, e: int) -> bool:
+        return (self.live[e] + self.inflight[e]) < self.mem_capacity
+
+    def _migrate(self, i: int, dst: int, now: float, reason: str, touched):
+        st = self.st
+        group = [i]
+        if st.comp_b[i] >= 0:
+            group.append(st.comp_b[i])
+        if st.comp_w[i] >= 0:
+            group.append(st.comp_w[i])
+        for g in group:
+            if self.started[g]:
+                return
+        src_e = st.home[i]
+        for g in group:
+            self.placement[g] = dst
+            self.migrated_away[g] = True
+            self.migq[dst].append(g)
+        self.inflight[dst] += 1
+        self.migrations.append(MigrationEvent(
+            now, st.cids[i], st.executors[src_e], st.executors[dst], reason))
+        self._inc_progress(st.replica[i], st.stage[i])  # Alg. 1 'Update P'
+        touched.add(dst)
+        touched.add(src_e)
+
+    # -------------------------------------------------------------- policy
+    def _decide(self, now: float, touched):
+        if self.policy == "none":
+            return
+        if self.policy == "recycle":
+            cand = self._dead_stages  # recycle only ever evicts fail-stops
+            if not cand:
+                return
+        elif self._dead_stages:
+            cand = sorted(self._hot.union(self._dead_stages))
+        elif self._hot:
+            cand = sorted(self._hot)
+        else:
+            return
+        R, S, P = self.n_replicas, self.n_stages, self._P
+        n_done = 0
+        for i in cand:
+            if n_done >= self.max_migrations_per_event:
+                break
+            alive = [d for d in range(R) if (d, i) not in self.dead]
+            if not alive:
+                continue
+            vals = [P[d][i] for d in range(R)]
+            if self.policy == "recycle":
+                for d in range(R):
+                    if (d, i) in self.dead:
+                        j = self._next_pending(d, i)
+                        if j is not None and alive:
+                            dst = alive[self._rr % len(alive)] * S + i
+                            self._rr += 1
+                            self._migrate(j, dst, now, "fail-stop", touched)
+                            n_done += 1
+                continue
+            d_min = min(range(R), key=lambda d: (vals[d], d))
+            d_max = max(alive, key=lambda d: (vals[d], -d))
+            src_dead = (d_min, i) in self.dead
+            gap = vals[d_max] - vals[d_min]
+            if not src_dead and gap <= self.delta:
+                continue
+            if d_max == d_min:
+                continue
+            j = self._next_pending(d_min, i)
+            if j is None:
+                continue
+            dst = d_max * S + i
+            if (d_max, i) in self.dead or not self._mem_feasible(dst):
+                continue
+            self._migrate(j, dst, now, "fail-stop" if src_dead else "fail-slow",
+                          touched)
+            n_done += 1
+
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, e: int, now: float, heap, seq: int) -> int:
+        if self.running[e] is not None or e in self._dead_e:
+            return seq
+        st = self.st
+        order = st.orders[e]
+        done, migrated = self.done, self.migrated_away
+        cur = self.cursor[e]
+        own = None
+        while cur < len(order):
+            c = order[cur]
+            if migrated[c] or done[c]:
+                cur += 1
+                continue
+            own = c
+            break
+        self.cursor[e] = cur
+        own_ready = self._ready_time(own) if own is not None else None
+        mig, mig_ready = None, None
+        started = self.started
+        for c in self.migq[e]:
+            if done[c] or started[c]:
+                continue
+            r = self._ready_time(c)
+            if r is not None and (mig_ready is None or r < mig_ready):
+                mig, mig_ready = c, r
+                if st.kind[c] != _KIND_W:
+                    break
+        cand, ready = None, None
+        own_now = own_ready is not None and own_ready <= now
+        mig_now = mig_ready is not None and mig_ready <= now
+        if own_now and mig_now:
+            mk = 0 if st.kind[mig] == _KIND_B else 1
+            ok = 0 if st.kind[own] == _KIND_B else 1
+            if (st.mb[mig], mk) < (st.mb[own], ok):
+                cand, ready = mig, mig_ready
+            else:
+                cand, ready = own, own_ready
+        elif own_now:
+            cand, ready = own, own_ready
+        elif mig_now:
+            cand, ready = mig, mig_ready
+        elif own_ready is not None or mig_ready is not None:
+            t = min(x for x in (own_ready, mig_ready) if x is not None)
+            heapq.heappush(heap, (t, seq, 1, e, -1))
+            return seq + 1
+        if cand is None:
+            return seq
+        started[cand] = True
+        self.running[e] = cand
+        dur = self.chunk_cost(st.cids[cand], st.executors[e])
+        t_end = max(now, ready) + dur
+        heapq.heappush(heap, (t_end, seq, 0, e, cand))
+        return seq + 1
+
+    # --------------------------------------------------------------- sim
+    def run(self) -> SimResult:
+        st = self.st
+        if self.policy == "none":
+            for (d, s) in self.dead:
+                if 0 <= d < self.n_replicas and 0 <= s < self.n_stages \
+                        and st.orders[d * self.n_stages + s]:
+                    return SimResult(
+                        math.inf, "aborted", {}, [], {}, {},
+                        detail=f"stage {(d, s)} is fail-stop and no migration policy")
+        heap: list = []
+        seq = 0
+        touched: set = set()
+        self._decide(0.0, touched)
+        for e in range(len(st.executors)):
+            seq = self._dispatch(e, 0.0, heap, seq)
+        guard = 0
+        limit = 50 * max(1, st.n_chunks)
+        kind, replica = st.kind, st.replica
+        while heap:
+            guard += 1
+            if guard > limit:
+                raise RuntimeError("migration sim: event budget exceeded (livelock?)")
+            now, _, typ, e, c = heapq.heappop(heap)
+            batch = [(typ, e, c)]
+            while heap and heap[0][0] <= now + 1e-12:
+                _, _, typ2, e2, c2 = heapq.heappop(heap)
+                batch.append((typ2, e2, c2))
+            any_done = False
+            touched = set()
+            for typ, e, c in batch:
+                if typ == 0:  # completion
+                    self.running[e] = None
+                    self.done[c] = True
+                    self.n_done_chunks += 1
+                    self.finish[c] = now
+                    if self._max_finish is None or now > self._max_finish:
+                        self._max_finish = now
+                    d = replica[c]
+                    if now > self._pr_finish[d]:
+                        self._pr_finish[d] = now
+                    k = kind[c]
+                    if k == _KIND_F:
+                        self.live[e] += 1
+                        if self.placement[c] >= 0:
+                            self.inflight[e] -= 1
+                        else:
+                            self._inc_progress(d, st.stage[c])
+                    elif k == _KIND_B:
+                        self.live[e] -= 1
+                    any_done = True
+                    touched.add(e)
+                    for r in st.rdeps[c]:
+                        touched.add(self._executor_of(r))
+                else:  # wake
+                    touched.add(e)
+            if any_done:
+                self._decide(now, touched)
+            for e2 in sorted(touched):
+                seq = self._dispatch(e2, now, heap, seq)
+
+        finish = {st.cids[i]: self.finish[i]
+                  for i in range(st.n_chunks) if self.done[i]}
+        if self.n_done_chunks != st.n_chunks:
+            missing = [st.cids[i] for i in range(st.n_chunks) if not self.done[i]]
+            return SimResult(math.inf, "aborted", finish, self.migrations,
+                             {}, {},
+                             detail=f"{len(missing)} chunks unexecuted, e.g. {missing[:4]}")
+        total = self._max_finish if self._max_finish is not None else 0.0
+        per_replica = {d: self._pr_finish[d] for d in range(self.n_replicas)}
+        return SimResult(total, "ok", finish, self.migrations, {}, per_replica)
+
+
+# ========================================================== cost vectorizer
+def make_cost_table(*, alpha, beta, gamma, workload, share, n_layers, mult,
+                    jit, true_speed, replica_map=None):
+    """Vectorized chunk-cost function, bit-identical to the scalar closure in
+    ``TrainingSim.step`` (``make_cost``).
+
+    The per-(stage, kind, micro-batch) numerators are precomputed once per
+    plan/iteration as numpy float64 arrays with the *same association order*
+    as the scalar expression — ``((base * K) * jit) / max(speed, 1e-9)`` with
+    ``base = (alpha*N + beta*sum_l2) + gamma`` and
+    ``K = (share[stage] * n_layers) * mult[kind]`` — so every lookup returns
+    the exact float the reference closure computes.  ``replica_map`` mirrors
+    the reference: when set, the chunk's replica is remapped and the executor
+    speed is looked up under the mapped replica (``_run_independent``).
+    """
+    mult_arr = np.array([mult["F"], mult["B"], mult["W"]], dtype=np.float64)
+    n_stages = max(share) + 1
+    share_arr = np.array([share[s] for s in range(n_stages)], dtype=np.float64)
+    K = (share_arr * n_layers)[:, None] * mult_arr[None, :]
+
+    tables: dict = {}
+
+    def _table(r: int):
+        t = tables.get(r)
+        if t is None:
+            mbs = workload.per_replica[r]
+            n_tok = np.array([w.n_tokens for w in mbs], dtype=np.float64)
+            l2 = np.array([w.sum_l2 for w in mbs], dtype=np.float64)
+            base = (alpha * n_tok + beta * l2) + gamma
+            t = tables[r] = (base[None, None, :] * K[:, :, None]) * jit
+        return t
+
+    vmax: dict = {}
+
+    def cost(cid: ChunkId, executor) -> float:
+        if replica_map is not None:
+            r = replica_map(cid.replica)
+            e = (r, executor[1])
+        else:
+            r = cid.replica
+            e = executor
+        v = vmax.get(e)
+        if v is None:
+            v = vmax[e] = max(true_speed.get(e, 1.0), 1e-9)
+        t = _table(r)
+        return float(t[cid.stage, _KIND_INDEX[cid.kind], cid.mb % t.shape[2]]) / v
+
+    return cost

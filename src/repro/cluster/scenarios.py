@@ -270,7 +270,24 @@ class PoissonFailures(FailureScenario):
     ``rate`` events per second over [``t_start``, ``t_end``), each event
     fail-stop with probability ``mix`` else fail-slow with severity drawn
     uniformly from ``severity``; repaired (elastic rejoin) after an
-    exponential repair time of mean ``mttr`` when set."""
+    exponential repair time of mean ``mttr`` when set.
+
+    Two victim-selection modes:
+
+    * **distinct-device** (``renewal=False``, the default) — victims come
+      from a seeded permutation and each device is hit at most once per
+      compiled timeline. This matches the paper's §8.1 injection protocol
+      (a bounded number of distinct faults per session) but understates
+      long sessions, where nothing stops a repaired GPU from failing again.
+    * **renewal process** (``renewal=True``) — a device that has completed
+      its exponential repair (``mttr``) re-enters the victim pool, so the
+      same device can fail, rejoin and fail again, approximating a
+      per-device MTTF/MTTR renewal process (the fleet model in the
+      ByteDance-scale reliability literature). Without ``mttr`` there are
+      no repairs, so the two modes emit identical event kinds.
+
+    Both modes are deterministic for a fixed (topology, seed).
+    """
     rate: float
     t_end: float
     t_start: float = 0.0
@@ -278,15 +295,27 @@ class PoissonFailures(FailureScenario):
     severity: tuple = (0.3, 0.6)
     mttr: Optional[float] = None
     max_events: int = 64
+    renewal: bool = False
 
     def events(self, topo, rng):
         t, emitted = self.t_start, 0
         pool = list(rng.permutation(topo.n_devices))
-        while emitted < self.max_events and pool:
+        down: list = []  # (repair-complete time, device) — renewal mode
+        while emitted < self.max_events:
             t += float(rng.exponential(1.0 / max(self.rate, 1e-12)))
             if t >= self.t_end:
                 break
-            d = int(pool.pop(0))  # distinct devices: no double-kill
+            if self.renewal and down:
+                # repaired devices rejoin the victim pool (renewal process)
+                back = sorted(e for e in down if e[0] <= t)
+                if back:
+                    down = [e for e in down if e[0] > t]
+                    pool.extend(d for _, d in back)
+            if not pool:
+                if self.renewal and down:
+                    continue  # everything is mid-repair; arrival hits nothing
+                break  # distinct devices exhausted: no double-kill
+            d = int(pool.pop(0))
             if float(rng.uniform()) < self.mix:
                 yield self._ev(t, "fail-stop", d)
             else:
@@ -295,6 +324,8 @@ class PoissonFailures(FailureScenario):
             if self.mttr is not None:
                 dt = float(rng.exponential(self.mttr))
                 yield self._ev(t + dt, "rejoin", d)
+                if self.renewal:
+                    down.append((t + dt, d))
             emitted += 1
 
 
@@ -491,5 +522,7 @@ def _slow_ramp_mix(span: float = 160.0) -> FailureScenario:
 
 @register("poisson_storm")
 def _poisson_storm(rate: float = 0.05, t_end: float = 160.0, mix: float = 0.5,
-                   mttr: Optional[float] = 40.0) -> FailureScenario:
-    return PoissonFailures(rate=rate, t_end=t_end, mix=mix, mttr=mttr)
+                   mttr: Optional[float] = 40.0,
+                   renewal: bool = False) -> FailureScenario:
+    return PoissonFailures(rate=rate, t_end=t_end, mix=mix, mttr=mttr,
+                           renewal=renewal)

@@ -18,6 +18,7 @@ Fig. 9, Fig. 10, Fig. 11 and the Fig. 14 large-scale run.
 """
 from __future__ import annotations
 
+import heapq
 import math
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -26,6 +27,7 @@ import numpy as np
 
 from repro.cluster.baselines import BasePolicy, PolicyDecision, make_policy
 from repro.cluster.events import Event, apply_event
+from repro.cluster.fastsim import FastMigrator, make_cost_table
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.workload import WorkloadGen
 from repro.core.detector.changepoint import CusumDetector
@@ -82,8 +84,25 @@ class IterRecord:
 
 
 class TrainingSim:
+    """Cluster training simulator.
+
+    ``engine`` selects the pipeline-execution core:
+
+    * ``"fast"`` (default) — :class:`repro.cluster.fastsim.FastMigrator` with
+      vectorized chunk-cost tables: same results bit-for-bit, orders of
+      magnitude faster at scale (see ``BENCH_simcore.json``), opening
+      1k+-device sweeps;
+    * ``"python"`` — the reference
+      :class:`~repro.core.scheduler.migration.ProgressAwareMigrator` event
+      loop, kept as the semantic anchor and parity baseline.
+    """
+
     def __init__(self, policy_name: str, cfg: SimConfig, *, layer_costs=None,
-                 policy_kwargs=None, detector_kwargs=None):
+                 policy_kwargs=None, detector_kwargs=None, engine: str = "fast"):
+        if engine not in ("python", "fast"):
+            raise ValueError(f"unknown engine {engine!r}; one of ('python', 'fast')")
+        self.engine = engine
+        self._migrator_cls = FastMigrator if engine == "fast" else ProgressAwareMigrator
         self.cfg = cfg
         self.layer_costs = list(layer_costs) if layer_costs else [1.0] * cfg.n_layers
         self.topo = ClusterTopology(
@@ -122,7 +141,11 @@ class TrainingSim:
         self.now = 0.0
         self.it = 0
         self.aborted = False
-        self.pending_events: list = []  # compiled Events, time-sorted
+        # min-heap of (Event, seq): scenario timelines merge in O(log n) and
+        # pop in the same order the previous sorted-list representation
+        # produced (full Event field order, insertion order on exact ties)
+        self.pending_events: list = []
+        self._event_seq = 0
         self.event_log: list = []  # Events already applied, in firing order
 
     # ------------------------------------------------------------ predictor
@@ -153,7 +176,7 @@ class TrainingSim:
                 kind=cid.kind,
             )
 
-        m = ProgressAwareMigrator(
+        m = self._migrator_cls(
             n_stages=plan.replicas[0].pp, n_replicas=plan.dp,
             n_microbatches=decision.n_mb if decision else plan.microbatches,
             chunk_cost=cost, schedule=self.cfg.schedule, policy="none",
@@ -206,14 +229,18 @@ class TrainingSim:
         assert isinstance(scenario, FailureScenario), scenario
         trace = scenario.compile(
             self.topo, self.cfg.seed if seed is None else seed)
-        self.pending_events = sorted([*self.pending_events, *trace])
+        for ev in trace:
+            self._push_event(ev)
         return trace
+
+    def _push_event(self, ev: Event):
+        heapq.heappush(self.pending_events, (ev, self._event_seq))
+        self._event_seq += 1
 
     def inject_at(self, time_s: float, fn: Callable):
         """Legacy shim: fn(cluster, now) applied once simulated time passes
         time_s. Prefer apply_scenario with a declarative FailureScenario."""
-        self.pending_events = sorted(
-            [*self.pending_events, Event(float(time_s), "callback", fn=fn)])
+        self._push_event(Event(float(time_s), "callback", fn=fn))
 
     def _on_rejoin(self, device: int):
         """Elastic rejoin: the repaired device announces itself, so the
@@ -226,8 +253,8 @@ class TrainingSim:
         ``event.t <= t`` against the cluster (and system beliefs, for
         rejoins), appending them to ``event_log``."""
         fired = []
-        while self.pending_events and self.pending_events[0].t <= t:
-            ev = self.pending_events.pop(0)
+        while self.pending_events and self.pending_events[0][0].t <= t:
+            ev = heapq.heappop(self.pending_events)[0]
             apply_event(ev, self.cluster, self.now, on_rejoin=self._on_rejoin)
             self.event_log.append(ev)
             fired.append(ev)
@@ -306,6 +333,15 @@ class TrainingSim:
         jit = float(self.rng.normal(1.0, cfg.noise)) if cfg.noise else 1.0
 
         def make_cost(share, replica_map=None):
+            if self.engine == "fast":
+                # vectorized per-(stage, kind, micro-batch) cost arrays,
+                # bit-identical to the scalar closure below
+                return make_cost_table(
+                    alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
+                    workload=workload, share=share,
+                    n_layers=len(self.layer_costs), mult=mult, jit=jit,
+                    true_speed=true_speed, replica_map=replica_map)
+
             def cost(cid: ChunkId, executor) -> float:
                 r = replica_map(cid.replica) if replica_map else cid.replica
                 mbw = workload.stats(r, cid.mb)
@@ -323,7 +359,7 @@ class TrainingSim:
             res = self._run_independent(decision, make_cost, dead)
         else:
             share = self._stage_shares(plan)
-            m = ProgressAwareMigrator(
+            m = self._migrator_cls(
                 n_stages=plan.replicas[0].pp,
                 n_replicas=plan.dp,
                 n_microbatches=decision.n_mb,
@@ -380,7 +416,7 @@ class TrainingSim:
                 continue
             share = self._stage_shares(plan, r)
             dead_r = [(0, s) for (dr, s) in dead if dr == r and s < rep.pp]
-            m = ProgressAwareMigrator(
+            m = self._migrator_cls(
                 n_stages=rep.pp, n_replicas=1,
                 n_microbatches=[decision.n_mb[r]],
                 chunk_cost=make_cost(share, replica_map=lambda _=None, r=r: r),

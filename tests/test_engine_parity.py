@@ -1,0 +1,75 @@
+"""Engine parity: the fast execution core (``engine="fast"``, the default)
+must reproduce the reference python engine bit-for-bit.
+
+Runs named scenarios through both engines under three policies that between
+them exercise every execution path: ``resihp`` (joint migrating pipeline,
+Algorithm 1), ``recycle+`` (round-robin fail-stop eviction + redistributed
+micro-batches) and ``oobleck+`` (heterogeneous per-replica pipelines via
+``_run_independent``). The streams are compared exactly — floats included —
+because the fast engine's contract is identity, not approximation.
+
+``plan_overhead_fixed`` pins ResiHP's wall-clock-measured planning charge
+(Fig. 13 methodology) so ``t_start`` timestamps are machine-independent;
+free-text event payloads (abort details) are dropped from the comparison
+because their wording may hinge on set-iteration order, not behavior.
+"""
+import pytest
+
+from repro.cluster import scenarios
+from repro.cluster.simulator import SimConfig, TrainingSim
+
+CFG = SimConfig(dp=2, pp=2, tp=2, n_layers=8, n_microbatches=4,
+                seq_len=2048, noise=0.01, seed=0)
+ITERS = 40
+SCENARIOS = {
+    "fig10_mixed": dict(span=20.0),
+    "flapping_stragglers": dict(span=25.0),
+    "slow_ramp_mix": dict(span=25.0),
+}
+POLICIES = {
+    "resihp": {"plan_overhead_fixed": 0.25},
+    "recycle+": {},
+    "oobleck+": {},
+}
+
+
+def _run(engine, scenario, policy):
+    sim = TrainingSim(policy, CFG, policy_kwargs=POLICIES[policy],
+                      engine=engine)
+    sim.apply_scenario(scenarios.get(scenario, **SCENARIOS[scenario]))
+    sim.run(ITERS, stop_on_abort=False)
+    return sim
+
+
+def _stream(sim):
+    """IterRecord stream with free-text payloads stripped."""
+    out = []
+    for r in sim.trace:
+        events = [
+            (e[0], *(x for x in e[1:] if not isinstance(x, str)))
+            if isinstance(e, tuple) else e
+            for e in r.events
+        ]
+        out.append((r.iteration, r.t_start, r.duration, r.throughput, events))
+    return out
+
+
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_engines_produce_identical_iter_records(scenario, policy):
+    a = _run("python", scenario, policy)
+    b = _run("fast", scenario, policy)
+    assert _stream(a) == _stream(b)
+    assert a.aborted == b.aborted
+    assert a.avg_throughput(skip=2) == b.avg_throughput(skip=2)
+    assert ([ev.as_tuple() for ev in a.event_log]
+            == [ev.as_tuple() for ev in b.event_log])
+
+
+def test_default_engine_is_fast():
+    assert TrainingSim("resihp", CFG).engine == "fast"
+
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError):
+        TrainingSim("resihp", CFG, engine="warp")

@@ -186,6 +186,33 @@ def test_poisson_storm_distinct_devices_with_repairs():
     assert rejoins == set(targets)
 
 
+def test_poisson_renewal_mode_refails_repaired_devices():
+    """renewal=True returns repaired devices to the victim pool; the default
+    distinct-device mode stops once every device has been hit once."""
+    topo4 = ClusterTopology(1, 4)  # tiny fleet so the pool exhausts quickly
+    kw = dict(rate=1.0, t_end=200.0, mttr=2.0, max_events=24)
+    default = PoissonFailures(**kw).compile(topo4, 0)
+    renewal = PoissonFailures(renewal=True, **kw).compile(topo4, 0)
+
+    def fail_targets(tr):
+        return [ev.target for ev in tr
+                if ev.kind in ("fail-stop", "fail-slow")]
+
+    d_hits, r_hits = fail_targets(default), fail_targets(renewal)
+    assert len(d_hits) == len(set(d_hits)) <= 4  # distinct-device contract
+    assert len(r_hits) > len(set(r_hits))  # some device failed again
+    # a device is never re-failed before its repair completed
+    down_until: dict = {}
+    for ev in renewal:
+        if ev.kind in ("fail-stop", "fail-slow"):
+            assert ev.t >= down_until.get(ev.target, 0.0)
+        elif ev.kind == "rejoin":
+            down_until[ev.target] = ev.t
+    # deterministic like every other scenario
+    assert renewal.to_json() == \
+        PoissonFailures(renewal=True, **kw).compile(topo4, 0).to_json()
+
+
 # --------------------------------------------------------- simulator wiring
 def test_apply_scenario_fires_events_in_sim():
     sim = TrainingSim("resihp", SMALL)
