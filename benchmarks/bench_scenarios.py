@@ -1,12 +1,18 @@
 """Scenario sweep: failure families no paper figure covers — correlated rack
-storms, transient flap-then-recover cycles, slow-ramp straggler mixes and a
-Poisson background storm — ResiHP vs the strengthened baselines.
+storms, transient flap-then-recover cycles, slow-ramp straggler mixes, a
+Poisson background storm and degraded rejoins — ResiHP (with and without the
+failure-lifecycle subsystem) vs the strengthened baselines.
 
 These stress exactly the behaviors the fleet literature reports (ByteDance's
 correlated infra faults, ElasWave's elastic rejoin) and that the Fig. 9-14
 protocols never exercise: co-located simultaneous fail-stops, devices that
-bounce between dead and healthy, and degradations that creep in over minutes
-instead of arriving as a step.
+bounce between dead and healthy, degradations that creep in over minutes
+instead of arriving as a step, and repaired devices that return below peak.
+
+``resihp+lc`` is ResiHP with ``ResiHPPolicy(lifecycle=...)`` enabled (flap
+quarantine + ramp-aware drift + rejoin admission — default-off elsewhere);
+its rows carry the lifecycle columns (validations, false alarms, quarantines,
+probes) so detector regressions are visible next to throughput.
 """
 from __future__ import annotations
 
@@ -23,24 +29,39 @@ SWEEP = {
     "slow_ramp_mix": lambda span: scenarios.get("slow_ramp_mix", span=span),
     "poisson_storm": lambda span: scenarios.get(
         "poisson_storm", rate=4.0 / span, t_end=span, mttr=0.25 * span),
+    "degraded_rejoins": lambda span: scenarios.get(
+        "degraded_rejoins", span=span),
 }
 
-POLICIES = ("resihp", "recycle+", "oobleck+")
+# policy label -> (policy name, policy kwargs); the lifecycle runs are the
+# only place the default-off ResiHPPolicy(lifecycle=...) switch is on
+POLICIES = {
+    "resihp": ("resihp", {}),
+    "resihp+lc": ("resihp", {"lifecycle": True}),
+    "recycle+": ("recycle+", {}),
+    "oobleck+": ("oobleck+", {}),
+}
 
 
 def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
         engine="fast", scale=None):
     cfg = sim_config(model, seed=seed, scale=scale)
-    sim = TrainingSim(policy, cfg, engine=engine)
+    name, policy_kwargs = POLICIES[policy]
+    sim = TrainingSim(name, cfg, engine=engine, policy_kwargs=policy_kwargs)
     span = iters * 0.8
     trace = sim.apply_scenario(SWEEP[scenario_name](span))
     sim.run(iters, stop_on_abort=False)
-    return {
+    st = sim.detector.stats
+    out = {
         "throughput": sim.avg_throughput(skip=2),
         "aborted": sim.aborted,
         "n_events": len(trace),
         "events": trace.as_tuples(),
+        "detector": st.as_dict(),
     }
+    if sim.lifecycle is not None:
+        out["lifecycle"] = sim.lifecycle.stats.as_dict()
+    return out
 
 
 def main(quick=False, engine="fast"):
@@ -55,11 +76,23 @@ def main(quick=False, engine="fast"):
             resi = rs["resihp"]["throughput"]
             for p, r in rs.items():
                 t = r["throughput"]
+                det = r["detector"]
+                if p == "resihp+lc":
+                    lc = r.get("lifecycle", {})
+                    derived = (f"vals={det['validations']}"
+                               f" fa={det['false_alarms']}"
+                               f" quar={lc.get('quarantines', 0)}"
+                               f" probes={lc.get('probes', 0)}")
+                elif p == "resihp":
+                    derived = (f"n_events={r['n_events']}"
+                               f" vals={det['validations']}"
+                               f" fa={det['false_alarms']}")
+                else:
+                    derived = f"resihp_speedup={resi / max(t, 1e-9):.2f}x"
                 rows.append((
                     f"scenarios/{model}/{sc}/{p}",
                     "-" if r["aborted"] else round(t, 2),
-                    f"resihp_speedup={resi/max(t,1e-9):.2f}x"
-                    if p != "resihp" else f"n_events={r['n_events']}"))
+                    derived))
     write_result("scenarios_sweep", out)
     return rows
 

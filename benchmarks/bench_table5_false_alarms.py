@@ -1,45 +1,69 @@
 """Table 5: false alarms, per-alarm overhead, fail-slow detection accuracy —
 ResiHP (workload filter) vs Greyhound (no filter), over many short jobs with
-fail-slow injected in ~half of them."""
+fail-slow injected in ~half of them.
+
+Extended with a ``resihp+lc`` row (the failure-lifecycle subsystem: slope
+drift + carried baselines + debounced validation) and detection-latency
+columns, so detector changes show up per-night in CI as false-alarm or
+latency regressions (run with ``--quick`` in the nightly workflow)."""
 from __future__ import annotations
 
 from benchmarks.common import sim_config, write_result
 from repro.cluster import scenarios
 from repro.cluster.simulator import TrainingSim
 
+# label -> (policy, policy kwargs, detector workload filter)
+VARIANTS = {
+    "resihp": ("resihp", {}, True),
+    "resihp+lc": ("resihp", {"lifecycle": True}, True),
+    "greyhound": ("greyhound", {}, False),
+}
 
-def run_jobs(policy: str, *, n_jobs=12, iters=110, model="qwen2.5-7b", seed=0):
-    fa = vals = hits = injected = filtered = 0
+
+def run_jobs(variant: str, *, n_jobs=12, iters=110, model="qwen2.5-7b",
+             seed=0):
+    policy, policy_kwargs, filt = VARIANTS[variant]
+    fa = vals = hits = injected = filtered = drift = 0
     overhead = 0.0
+    latencies = []
     for j in range(n_jobs):
         cfg = sim_config(model, seed=seed * 100 + j)
-        sim = TrainingSim(policy, cfg,
-                          detector_kwargs={"workload_filter": policy == "resihp"})
+        sim = TrainingSim(policy, cfg, policy_kwargs=policy_kwargs,
+                          detector_kwargs={"workload_filter": filt})
         inject = j % 2 == 0
+        inj_t = None
         if inject:
             injected += 1
             # random time in the mid-session window (leave warm-up + response
             # room), random device/severity — seeded per job (~0.8 s/iter)
-            sim.apply_scenario(scenarios.get(
-                "table5_failslow", window=(iters * 0.35 * 0.8, iters * 0.65 * 0.8)))
+            trace = sim.apply_scenario(scenarios.get(
+                "table5_failslow",
+                window=(iters * 0.35 * 0.8, iters * 0.65 * 0.8)))
+            inj_t = trace[0].t
         sim.run(iters)
         st = sim.detector.stats
         fa += st.false_alarms
         vals += st.validations
         filtered += st.filtered_benign
+        drift += st.drift_alarms
         overhead += st.validation_overhead_s + st.filter_overhead_s
-        if inject and any(r.kind == "fail-slow" for r in sim.detector.reports):
+        reports = [r for r in sim.detector.reports if r.kind == "fail-slow"]
+        if inject and reports:
             hits += 1
+            latencies.append(max(reports[0].time - inj_t, 0.0))
     return {
-        "policy": policy,
+        "policy": variant,
         "jobs": n_jobs,
         "injected": injected,
         "avg_false_alarms": fa / n_jobs,
         "validations": vals,
         "filtered_benign": filtered,
+        "drift_alarms": drift,
         "overhead_per_false_alarm_s": (overhead / fa) if fa else 0.0,
         "total_detection_overhead_s": overhead,
         "detection_accuracy": hits / max(injected, 1),
+        "avg_detect_latency_s": (sum(latencies) / len(latencies)
+                                 if latencies else None),
     }
 
 
@@ -49,17 +73,25 @@ def main(quick=False):
     rows = []
     out = {}
     for model in (["qwen2.5-7b"] if quick else ["qwen2.5-7b", "qwen2.5-14b"]):
-        for policy in ("resihp", "greyhound"):
-            r = run_jobs(policy, n_jobs=n, iters=iters, model=model)
-            out[f"{model}/{policy}"] = r
-            rows.append((f"table5/{model}/{policy}/false_alarms",
+        for variant in VARIANTS:
+            r = run_jobs(variant, n_jobs=n, iters=iters, model=model)
+            out[f"{model}/{variant}"] = r
+            lat = r["avg_detect_latency_s"]
+            rows.append((f"table5/{model}/{variant}/false_alarms",
                          round(r["avg_false_alarms"], 2),
-                         f"acc={r['detection_accuracy']:.2f} ovh={r['total_detection_overhead_s']:.2f}s"))
+                         f"acc={r['detection_accuracy']:.2f}"
+                         f" ovh={r['total_detection_overhead_s']:.2f}s"
+                         + (f" lat={lat:.1f}s" if lat is not None else "")))
     write_result("table5_false_alarms", out)
     return rows
 
 
 if __name__ == "__main__":
+    import argparse
+
     from benchmarks.common import emit
 
-    emit(main())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    emit(main(quick=args.quick))

@@ -99,7 +99,11 @@ class BasePolicy:
         vals = [stage_speeds.get((r, s), 0.0) for s in range(pp)]
         return min(vals) if vals else 0.0
 
-    def decide(self, speeds, *, changed: bool) -> PolicyDecision:
+    def decide(self, speeds, *, changed: bool,
+               excluded=frozenset()) -> PolicyDecision:
+        """``excluded``: lifecycle-quarantined devices; only policies with a
+        failure-lifecycle story (ResiHP) act on it — baselines ignore it,
+        mirroring their lack of flap memory (§3 limitations)."""
         raise NotImplementedError
 
 
@@ -114,7 +118,8 @@ class ReCyclePolicy(BasePolicy):
         if self.failslow_aware:
             self.name = "recycle+"
 
-    def decide(self, speeds, *, changed: bool) -> PolicyDecision:
+    def decide(self, speeds, *, changed: bool,
+               excluded=frozenset()) -> PolicyDecision:
         plan = self.plan0
         dead, stage_speeds = [], {}
         eff = dict(speeds)
@@ -163,7 +168,8 @@ class OobleckPolicy(BasePolicy):
         if self.failslow_aware:
             self.name = "oobleck+"
 
-    def decide(self, speeds, *, changed: bool) -> PolicyDecision:
+    def decide(self, speeds, *, changed: bool,
+               excluded=frozenset()) -> PolicyDecision:
         plan0 = self.plan0
         pp = plan0.replicas[0].pp
         lost = sum(1 for d in plan0.devices if speeds.get(d, 1.0) <= 0.0)
@@ -229,7 +235,8 @@ class GreyhoundPolicy(BasePolicy):
     name: str = "greyhound"
     handles_failslow: bool = True
 
-    def decide(self, speeds, *, changed: bool) -> PolicyDecision:
+    def decide(self, speeds, *, changed: bool,
+               excluded=frozenset()) -> PolicyDecision:
         plan = self.plan0
         pp = plan.replicas[0].pp
         stage_speeds, dead = {}, []
@@ -263,7 +270,8 @@ class AdaptraPolicy(BasePolicy):
     # asynchronous P2P + schedule adaptation
     compute_recovery: float = 0.25  # ZB bubble-filling hides a bit of compute
 
-    def decide(self, speeds, *, changed: bool) -> PolicyDecision:
+    def decide(self, speeds, *, changed: bool,
+               excluded=frozenset()) -> PolicyDecision:
         plan = self.plan0
         stage_speeds, dead = {}, []
         for r, rep in enumerate(plan.replicas):
@@ -301,8 +309,18 @@ class ResiHPPolicy(BasePolicy):
     enable_selective: bool = True
     enable_repartition: bool = True
     migration_mode: str = "resihp"  # 'resihp' | 'recycle' (progress-unaware)
+    # failure-lifecycle policies (flap quarantine / ramp-aware drift / rejoin
+    # admission — see repro.core.detector.lifecycle). Default OFF: the paper's
+    # one-shot failure model, bit-for-bit the pre-lifecycle behaviour. Pass
+    # ``lifecycle=True`` for the default LifecycleConfig or a LifecycleConfig
+    # for tuned/ablated policies; TrainingSim builds the manager from it.
+    lifecycle: Optional[object] = None
 
     def __post_init__(self):
+        if self.lifecycle is True:
+            from repro.core.detector.lifecycle import LifecycleConfig
+
+            self.lifecycle = LifecycleConfig()
         if self.scheduler is None:
             self.scheduler = Scheduler(
                 layer_costs=list(self.layer_costs), k_min=self.k_min,
@@ -311,9 +329,13 @@ class ResiHPPolicy(BasePolicy):
                 enable_repartition=self.enable_repartition,
             )
 
-    def decide(self, speeds, *, changed: bool) -> PolicyDecision:
+    def decide(self, speeds, *, changed: bool,
+               excluded=frozenset()) -> PolicyDecision:
         failed = {d for d, v in speeds.items() if v <= 0.0}
-        ad = self.scheduler.adapt(self.plan0, speeds, failed=failed)
+        # quarantine exclusion is owned by Scheduler.adapt (it unions
+        # quarantined into failed and records the note)
+        ad = self.scheduler.adapt(self.plan0, speeds, failed=failed,
+                                  quarantined=frozenset(excluded))
         overhead = 0.0
         if changed:
             moved_layers = 0

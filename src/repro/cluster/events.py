@@ -16,7 +16,9 @@ Event kinds
                     component only — dead/slow devices stay dead/slow)
 ``rejoin``          device ``target`` repaired AND re-announced to the system
                     (the elastic-rejoin model: the scheduler learns the device
-                    is healthy again, unlike a silent repair)
+                    is back, unlike a silent repair). ``value`` in (0, 1)
+                    means the device returns *degraded* to that fraction of
+                    peak speed; 0.0 (the default) means full health
 ``callback``        opaque ``fn(cluster, now)`` — inject_at compatibility
 """
 from __future__ import annotations
@@ -54,6 +56,18 @@ class Event:
                 float(self.value), self.scenario)
 
 
+def encode_rejoin_speed(speed: float) -> float:
+    """``Event.value`` encoding for a rejoin's return speed: 0.0 (the Event
+    default, emitted by every pre-existing scenario) means full health; a
+    value in (0, 1) is a degraded return. A rejoin always brings the device
+    back alive — "returns dead" is not a rejoin."""
+    return speed if 0.0 < speed < 1.0 else 0.0
+
+
+def decode_rejoin_speed(value: float) -> float:
+    return value if 0.0 < value < 1.0 else 1.0
+
+
 def apply_event(ev: Event, cluster, now: float, *, on_rejoin=None) -> None:
     """Apply one event to a ClusterState; ``on_rejoin(device)`` lets the
     caller propagate elastic rejoins into system beliefs."""
@@ -68,7 +82,7 @@ def apply_event(ev: Event, cluster, now: float, *, on_rejoin=None) -> None:
     elif ev.kind == "net-restore":
         cluster.restore_network(ev.target, now=now)
     elif ev.kind == "rejoin":
-        cluster.repair(ev.target, now)
+        cluster.repair(ev.target, now, speed=decode_rejoin_speed(ev.value))
         if on_rejoin is not None:
             on_rejoin(ev.target)
     elif ev.kind == "callback":

@@ -476,6 +476,54 @@ class FastMigrator:
         return SimResult(total, "ok", finish, self.migrations, {}, per_replica)
 
 
+# ====================================================== belief plumbing
+class StageSpeedCache:
+    """Vectorized true-device-state -> per-(replica, stage) group-speed sync
+    for the fast engine (the first of the remaining per-device python loops
+    the ROADMAP flags for 10k+-device sweeps).
+
+    The reference loop in ``TrainingSim._true_stage_speeds`` is
+    ``(st.tp / tp0) * min(speeds[d] for d in st.devices)`` per stage, re-run
+    every iteration even though the plan only changes on reconfiguration.
+    Here the per-stage device-index arrays (and the ``tp/tp0`` ratios) are
+    cached per plan object and each call reduces with ``ndarray.min`` over a
+    dense speed vector — bit-identical floats, since min over float64 and the
+    single multiply are the exact operations of the reference expression.
+
+    The speed vector is built from ``ClusterState.speeds()``, whose dict is
+    insertion-ordered over the dense device ids ``0..n-1``.
+    """
+
+    def __init__(self):
+        self._plan = None
+        self._entries: list = []  # ((r, s), tp_ratio, device-index array|None)
+
+    def _rebuild(self, plan, tp0: int):
+        self._entries = []
+        for r, rep in enumerate(plan.replicas):
+            for s, st in enumerate(rep.stages):
+                ids = (np.fromiter(st.devices, dtype=np.intp,
+                                   count=len(st.devices))
+                       if st.devices else None)
+                self._entries.append(((r, s), st.tp / tp0, ids))
+        self._plan = plan
+
+    def speeds(self, plan, device_speeds: dict, tp0: int) -> dict:
+        if plan is not self._plan:
+            self._rebuild(plan, tp0)
+        # dense ids 0..n-1 in insertion order: C-speed fill, identical floats
+        vec = np.fromiter(device_speeds.values(), dtype=np.float64,
+                          count=len(device_speeds))
+        out = {}
+        for key, ratio, ids in self._entries:
+            if ids is None:
+                out[key] = 0.0
+                continue
+            m = vec[ids].min()
+            out[key] = 0.0 if m <= 0 else ratio * float(m)
+        return out
+
+
 # ========================================================== cost vectorizer
 def make_cost_table(*, alpha, beta, gamma, workload, share, n_layers, mult,
                     jit, true_speed, replica_map=None):

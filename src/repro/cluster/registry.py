@@ -95,7 +95,10 @@ class ClusterState:
             self.devices[d].net_scale = 1.0
         self.events.append((now, "net-restore", node, 1.0))
 
-    def repair(self, device_id: int, now: float = 0.0):
+    def repair(self, device_id: int, now: float = 0.0, speed: float = 1.0):
+        """Bring a device back; ``speed < 1.0`` models a degraded return
+        (swapped-in older part, partially-recovered thermal state) — the
+        case rejoin admission probing exists for."""
         dev = self.devices[device_id]
-        dev.alive, dev.speed, dev.net_scale = True, 1.0, 1.0
-        self.events.append((now, "repair", device_id, 1.0))
+        dev.alive, dev.speed, dev.net_scale = True, float(speed), 1.0
+        self.events.append((now, "repair", device_id, float(speed)))

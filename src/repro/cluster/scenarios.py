@@ -52,6 +52,9 @@ name                    models / used by
 ``poisson_storm``       memoryless background failure process with a
                         fail-stop/fail-slow mix and exponential repair times
                         (MTTF/MTTR fleet model); ``bench_scenarios``
+``degraded_rejoins``    devices fail-stop and return *degraded* (reduced
+                        speed): the rejoin-admission stress case —
+                        lifecycle sweeps in ``bench_scenarios``
 ======================  ====================================================
 """
 from __future__ import annotations
@@ -62,7 +65,7 @@ from typing import Callable, Iterable, Optional, Sequence
 
 import numpy as np
 
-from repro.cluster.events import Event, EventTrace
+from repro.cluster.events import Event, EventTrace, encode_rejoin_speed
 from repro.cluster.registry import ClusterTopology
 
 __all__ = [
@@ -169,18 +172,22 @@ class FailSlow(FailureScenario):
 @dataclass
 class TransientFlap(FailureScenario):
     """A device bounces: dead for ``down_time``, healthy for ``up_time``,
-    ``n_flaps`` times (NIC reset / kernel-driver hiccup model)."""
+    ``n_flaps`` times (NIC reset / kernel-driver hiccup model).
+    ``recover_speed < 1.0`` makes every bounce-back degraded (the part is
+    going bad) — the rejoin-admission stress case."""
     device: int
     at: float
     n_flaps: int = 3
     down_time: float = 4.0
     up_time: float = 10.0
+    recover_speed: float = 1.0
 
     def events(self, topo, rng):
         t = self.at
+        v = encode_rejoin_speed(self.recover_speed)
         for _ in range(self.n_flaps):
             yield self._ev(t, "fail-stop", self.device)
-            yield self._ev(t + self.down_time, "rejoin", self.device)
+            yield self._ev(t + self.down_time, "rejoin", self.device, v)
             t += self.down_time + self.up_time
 
 
@@ -203,13 +210,15 @@ class NetworkDegrade(FailureScenario):
 
 @dataclass
 class Rejoin(FailureScenario):
-    """Repair a device and announce it healthy to the system (elastic
-    rejoin, ElasWave-style)."""
+    """Repair a device and announce it to the system (elastic rejoin,
+    ElasWave-style); ``speed < 1.0`` = the device returns degraded."""
     device: int
     at: float
+    speed: float = 1.0
 
     def events(self, topo, rng):
-        yield self._ev(self.at, "rejoin", self.device)
+        yield self._ev(self.at, "rejoin", self.device,
+                       encode_rejoin_speed(self.speed))
 
 
 # ======================================================= stochastic storms
@@ -517,6 +526,19 @@ def _slow_ramp_mix(span: float = 160.0) -> FailureScenario:
                  ramp_steps=5),
         FailSlow(device=14, severity=0.3, at=0.65 * span, ramp=0.10 * span,
                  ramp_steps=3),
+    ])
+
+
+@register("degraded_rejoins")
+def _degraded_rejoins(span: float = 160.0,
+                      recover_speed: float = 0.6) -> FailureScenario:
+    # devices die and come back *degraded*: the belief gap rejoin admission
+    # closes — without a probe the system schedules them as full-health
+    return Compose([
+        FailStop(at=0.10 * span, device=2),
+        Rejoin(device=2, at=0.30 * span, speed=recover_speed),
+        FailStop(at=0.45 * span, device=11),
+        Rejoin(device=11, at=0.60 * span, speed=recover_speed),
     ])
 
 

@@ -27,12 +27,13 @@ import numpy as np
 
 from repro.cluster.baselines import BasePolicy, PolicyDecision, make_policy
 from repro.cluster.events import Event, apply_event
-from repro.cluster.fastsim import FastMigrator, make_cost_table
+from repro.cluster.fastsim import FastMigrator, StageSpeedCache, make_cost_table
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.workload import WorkloadGen
-from repro.core.detector.changepoint import CusumDetector
+from repro.core.detector.changepoint import CusumDetector, SlopeDriftDetector
 from repro.core.detector.detector import Detector
 from repro.core.detector.heartbeat import HeartbeatMonitor
+from repro.core.detector.lifecycle import LifecycleManager
 from repro.core.detector.predictor import MicroBatchTimePredictor
 from repro.core.detector.dag_sim import ChunkId
 from repro.core.scheduler.migration import ProgressAwareMigrator
@@ -123,8 +124,30 @@ class TrainingSim:
         for n in range(self.topo.n_nodes):
             hb.register_node(n, self.cluster.node_devices(n))
         self._fitted = self._fit_predictor()
+
+        # ---- failure lifecycle (flap quarantine / drift / admission) ----
+        # built from the policy's default-off ``lifecycle`` switch; the probe
+        # is the ElasWave-style rejoin micro-benchmark (ground-truth lookup,
+        # cost charged to simulated time like Greyhound's validation pass)
+        lc_cfg = getattr(self.policy, "lifecycle", None)
+        self.lifecycle: Optional[LifecycleManager] = None
+        if lc_cfg:
+            self.lifecycle = LifecycleManager(
+                cfg=lc_cfg,
+                probe_fn=lambda d: self.cluster.devices[d].effective)
+
         dkw = dict(detector_kwargs or {})
         dkw.setdefault("workload_filter", policy_name.lower() == "resihp")
+        if lc_cfg:
+            dkw.setdefault("suppress_failstop_s", lc_cfg.failstop_suppress_s)
+            dkw.setdefault("validation_debounce_s",
+                           lc_cfg.validation_debounce_s)
+        if lc_cfg and lc_cfg.drift:
+            dkw.setdefault("drift_factory", SlopeDriftDetector)
+            dkw.setdefault("carry_baseline", True)
+            dkw.setdefault("drift_filter_threshold",
+                           lc_cfg.drift_filter_threshold)
+            dkw.setdefault("workload_scalar_fn", self._workload_scalar)
         self.detector = Detector(
             healthy_time_fn=self._healthy_time,
             validate_fn=self._validate,
@@ -132,6 +155,9 @@ class TrainingSim:
             changepoint_factory=lambda: CusumDetector(warmup=10),
             **dkw,
         )
+        # vectorized belief->stage-speed sync (fast engine only; the python
+        # engine keeps the reference per-device loop as the parity anchor)
+        self._stage_speed_cache = StageSpeedCache() if engine == "fast" else None
         # the system's *belief* about device speeds (truth lives in cluster)
         self.known_speeds = {d: 1.0 for d in self.cluster.devices}
         self._belief_dirty = True
@@ -185,6 +211,16 @@ class TrainingSim:
         r = m.run()
         return r.makespan if r.status == "ok" else float("inf")
 
+    def _workload_scalar(self, workload) -> float:
+        """Cheap Eq. 1 workload proxy (total predicted chunk seconds, no DAG
+        critical path): normalizes the drift test's input so per-iteration
+        workload swings don't mask a slow ramp's trend."""
+        tot = 0.0
+        for mbs in workload.per_replica:
+            for mb in mbs:
+                tot += self._fitted.predict(mb.n_tokens, mb.sum_l2)
+        return tot
+
     def _validate(self, iteration: int) -> list:
         """Validation phase: localize degraded devices (ground-truth lookup —
         Greyhound's micro-benchmark pass; the cost is charged by Detector)."""
@@ -208,6 +244,8 @@ class TrainingSim:
         state: (k/tp0) * min p over the group; 0 if any member is dead."""
         tp0 = self.cfg.tp
         speeds = self.cluster.speeds()
+        if self._stage_speed_cache is not None:
+            return self._stage_speed_cache.speeds(plan, speeds, tp0)
         out = {}
         for r, rep in enumerate(plan.replicas):
             for s, st in enumerate(rep.stages):
@@ -243,10 +281,27 @@ class TrainingSim:
         self._push_event(Event(float(time_s), "callback", fn=fn))
 
     def _on_rejoin(self, device: int):
-        """Elastic rejoin: the repaired device announces itself, so the
-        system's belief flips back to healthy and the policy re-plans."""
-        self.known_speeds[device] = 1.0
-        self._belief_dirty = True
+        """Elastic rejoin: the repaired device announces itself. Without the
+        lifecycle subsystem the belief flips to full health (the paper's
+        model — wrong when the device comes back degraded); with it, a flap
+        quarantine can absorb the rejoin entirely and the admission probe
+        seeds the belief with the *measured* speed."""
+        if self.lifecycle is not None:
+            dec = self.lifecycle.on_rejoin(device, self.now)
+            self.now += dec.probe_cost_s
+            if not dec.admit:
+                # quarantined: belief stays failed, heartbeat stays muted, no
+                # replan — the Scheduler keeps ignoring the flapper
+                return
+            speed = dec.speed
+        else:
+            speed = 1.0
+        # heartbeat-revive bugfix: clear the failed state so the device's
+        # *next* fail-stop is detectable (previously never cleared)
+        self.detector.heartbeat.revive(device, self.now)
+        if self.known_speeds.get(device) != speed:
+            self.known_speeds[device] = speed
+            self._belief_dirty = True
 
     def apply_events(self, t: float) -> list:
         """The single injection hook: fire every pending event with
@@ -260,11 +315,71 @@ class TrainingSim:
             fired.append(ev)
         return fired
 
+    def _expected_time(self, workload, decision) -> float:
+        """Expected *observed* iteration time under ``decision``: Eq. 2
+        critical path with predicted chunk times divided by the decision's
+        believed per-stage effective speeds. Unlike ``_healthy_time`` (the
+        workload filter's healthy reference) this includes the slowdowns the
+        system already knows about — the right scale for carrying the CUSUM
+        baseline across a reconfiguration, since the post-reconfig steady
+        state is legitimately slower than healthy whenever a mitigated
+        degradation remains."""
+        plan = decision.plan
+        share = self._stage_shares(plan)
+        speeds = decision.stage_speeds
+
+        def cost(cid: ChunkId, executor=None) -> float:
+            mbw = workload.stats(cid.replica, cid.mb)
+            base = self._fitted.predict(
+                mbw.n_tokens, mbw.sum_l2,
+                n_layers=share[cid.stage] * len(self.layer_costs),
+                kind=cid.kind,
+            )
+            v = speeds.get((cid.replica, cid.stage), 1.0)
+            return base / max(v, 1e-9)
+
+        m = self._migrator_cls(
+            n_stages=plan.replicas[0].pp, n_replicas=plan.dp,
+            n_microbatches=decision.n_mb, chunk_cost=cost,
+            schedule=self.cfg.schedule, policy="none",
+            p2p_cost=self.cfg.p2p_cost,
+        )
+        r = m.run()
+        return r.makespan if r.status == "ok" else float("inf")
+
+    def _rebaseline_scale(self, old_decision) -> Optional[float]:
+        """Predicted expected-time ratio (new decision / old decision) for
+        the ramp-aware baseline carry. Only computed when the Detector will
+        use it (lifecycle drift policy on) — two extra Eq. 2 critical-path
+        evaluations per reconfiguration; ``None`` otherwise, which makes
+        ``rebaseline`` behave exactly as before (full reset)."""
+        if (not self.detector.carry_baseline or old_decision is None
+                or old_decision.aborted or self._decision.aborted):
+            return None
+        w = self.gen.for_iteration(self.it)
+        h_new = self._expected_time(w, self._decision)
+        h_old = self._expected_time(w, old_decision)
+        if not (math.isfinite(h_old) and math.isfinite(h_new)) or h_old <= 0:
+            return None
+        return h_new / h_old
+
     # ------------------------------------------------------------ stepping
     def _sync_beliefs(self) -> list:
         """Detection: heartbeats catch fail-stop immediately; fail-slow is
         detected via the Detector's series analysis with latency."""
         events = []
+        # quarantine releases: probe expired quarantines and readmit (or
+        # extend the backoff for devices that are still down)
+        if self.lifecycle is not None:
+            for dec in self.lifecycle.poll_releases(self.now):
+                self.now += dec.probe_cost_s
+                if not dec.admit:
+                    continue
+                self.detector.heartbeat.revive(dec.device, self.now)
+                if self.known_speeds.get(dec.device) != dec.speed:
+                    self.known_speeds[dec.device] = dec.speed
+                    self._belief_dirty = True
+                events.append(("readmitted", (dec.device, dec.speed)))
         # fail-stop: heartbeat sweep (dead devices stopped beating)
         for d, dev in self.cluster.devices.items():
             if dev.alive:
@@ -275,6 +390,8 @@ class TrainingSim:
         rep = self.detector.poll_failstop(self.now)
         if rep:
             for d in rep.devices:
+                if self.lifecycle is not None:
+                    self.lifecycle.record_failstop(d, self.now)
                 if self.known_speeds.get(d, 1.0) != 0.0:
                     self.known_speeds[d] = 0.0
                     self._belief_dirty = True
@@ -288,6 +405,8 @@ class TrainingSim:
                     self.known_speeds[d] = speed
                     self._belief_dirty = True
                     events.append(("fail-slow-detected", (d, speed)))
+                    if self.lifecycle is not None:
+                        self.lifecycle.record_failslow(d, speed, self.now)
             else:
                 still.append((d, speed, at))
         self._failslow_backlog = still
@@ -301,12 +420,17 @@ class TrainingSim:
 
         if self._belief_dirty or self._decision is None:
             changed = self._decision is not None and self._belief_dirty
-            self._decision = self.policy.decide(self.known_speeds, changed=changed)
+            old_decision = self._decision
+            excluded = (self.lifecycle.quarantined(self.now)
+                        if self.lifecycle is not None else frozenset())
+            self._decision = self.policy.decide(self.known_speeds,
+                                                changed=changed,
+                                                excluded=excluded)
             self._belief_dirty = False
             if self._decision.reconfig_overhead_s:
                 self.now += self._decision.reconfig_overhead_s
                 events.append(("reconfig", self._decision.reconfig_overhead_s))
-                self.detector.rebaseline()
+                self.detector.rebaseline(self._rebaseline_scale(old_decision))
         decision = self._decision
         if decision.aborted:
             self.aborted = True

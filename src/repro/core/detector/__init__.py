@@ -1,5 +1,11 @@
 from repro.core.detector.predictor import MicroBatchTimePredictor  # noqa: F401
 from repro.core.detector.dag_sim import PipelineDag, simulate_pipeline  # noqa: F401
-from repro.core.detector.changepoint import BOCPD, CusumDetector  # noqa: F401
+from repro.core.detector.changepoint import BOCPD, CusumDetector, SlopeDriftDetector  # noqa: F401
 from repro.core.detector.heartbeat import HeartbeatMonitor  # noqa: F401
 from repro.core.detector.detector import Detector, FailureReport  # noqa: F401
+from repro.core.detector.lifecycle import (  # noqa: F401
+    FailureHistory,
+    LifecycleConfig,
+    LifecycleManager,
+    RejoinDecision,
+)

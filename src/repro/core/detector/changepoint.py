@@ -1,6 +1,6 @@
 """Online change-point detection over the iteration-time series (paper §5.2).
 
-Two detectors, same interface (`update(x) -> bool`):
+Three detectors, same core interface (`update(x) -> bool`):
 
 * `BOCPD` — Bayesian online change-point detection (Adams–MacKay style, the
   paper cites Agudelo-España et al. [1]): Normal-Inverse-Gamma conjugate
@@ -8,12 +8,20 @@ Two detectors, same interface (`update(x) -> bool`):
   when the posterior mass of "run length < lag" exceeds a threshold.
 * `CusumDetector` — one-sided CUSUM on standardized residuals; cheaper and
   what the large-scale simulator uses per DP group.
+* `SlopeDriftDetector` — windowed least-squares slope test for *creeping*
+  degradations (slow ramps): CUSUM needs the cumulative level shift to cross
+  its threshold inside one baseline epoch, which repeated rebaselining after
+  reconfigurations defeats; a significant positive trend fires even when
+  every individual step is below the CUSUM slack. Runs alongside CUSUM when
+  the failure-lifecycle drift policy is enabled (see
+  ``repro.core.detector.lifecycle``).
 
-Both are pure-python/numpy and O(window) per update, satisfying the paper's
+All are pure-python/numpy and O(window) per update, satisfying the paper's
 "lightweight enough for online per-iteration detection" requirement.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -146,6 +154,7 @@ class CusumDetector:
     warmup: int = 12
     _hist: list = field(default_factory=list)
     _s: float = 0.0
+    _prev_s: float = 0.0  # _s before the last update (discard_last rewind)
     _mean: float = 0.0
     _std: float = 1.0
     _frozen: bool = False
@@ -160,6 +169,7 @@ class CusumDetector:
                 self._frozen = True
             return False
         z = (float(x) - self._mean) / self._std
+        self._prev_s = self._s
         self._s = max(0.0, self._s + z - self.k)
         if self._s > self.h:
             self._s = 0.0
@@ -168,13 +178,108 @@ class CusumDetector:
 
     def discard_last(self):
         """Remove the last point's contribution (paper: benign change points
-        are removed from the series so they don't perturb later detection)."""
-        # CUSUM state was already advanced; rewinding one step is enough
-        # because benign points are filtered before they can accumulate.
-        self._s = max(0.0, self._s)
+        are removed from the series so they don't perturb later detection).
+
+        Restores ``_s`` to its value before the last ``update`` — i.e. the
+        last z-increment (and, when the point pushed ``_s`` over ``h``, the
+        fire-reset to zero) is undone, so a benign workload spike neither
+        accumulates toward a spurious change point nor erases legitimately
+        accumulated drift evidence. During warm-up the point is dropped from
+        the baseline window instead (a companion drift detector can fire
+        before CUSUM is frozen)."""
+        if not self._frozen:
+            if self._hist:
+                self._hist.pop()
+            return
+        self._s = self._prev_s
+
+    def clear_evidence(self):
+        """Drop the accumulated evidence but keep the frozen baseline — used
+        when a validation pass has just certified the fleet healthy, proving
+        whatever ``_s`` had accumulated was noise."""
+        self._s = 0.0
+        self._prev_s = 0.0
+
+    def carried(self, scale: float) -> "CusumDetector":
+        """Baseline carry across a reconfiguration: the healthy iteration
+        time changes by a *predictable* ratio (Eq. 1/2 under old vs new
+        plan), so instead of re-learning from scratch — which lets a slow
+        ramp hide inside every fresh warm-up window — the frozen baseline is
+        rescaled by ``scale`` and the accumulated CUSUM evidence is kept
+        (``_s`` is in std units, invariant under a common rescale). Falls
+        back to a fresh detector if the baseline was never frozen."""
+        new = CusumDetector(k=self.k, h=self.h, warmup=self.warmup)
+        if self._frozen and scale > 0.0 and math.isfinite(scale):
+            new._mean = self._mean * scale
+            new._std = self._std * scale
+            new._frozen = True
+            new._s = self._s
+            new._prev_s = self._prev_s
+        return new
 
     def rebaseline(self):
         """Re-learn the healthy baseline (after a reconfiguration)."""
         self._hist = []
         self._s = 0.0
+        self._prev_s = 0.0
         self._frozen = False
+
+
+@dataclass
+class SlopeDriftDetector:
+    """Windowed least-squares trend test for slow-ramp degradations.
+
+    Fits ``y ~ a + b*t`` over the last ``window`` points and fires when the
+    slope is both practically significant (``b`` exceeds ``rel_slope_min`` of
+    the window mean per step) and statistically significant (``b / stderr(b)``
+    exceeds ``sig``). Complements CUSUM: a ramp spreads its level shift over
+    many points, each inside the CUSUM slack, but the trend statistic grows
+    with the window. The window is NOT cleared on a fire: while the trend
+    persists the detector keeps alarming (each alarm costs only the workload
+    filter) so the ramp is re-examined as it deepens — essential because the
+    filter releases a validation only once the ramp clears its margin.
+    ``rescale`` carries the window across a reconfiguration whose healthy
+    time changed by a predicted ratio."""
+
+    window: int = 40
+    min_points: int = 12
+    sig: float = 4.0  # threshold on the t-like statistic slope/stderr
+    rel_slope_min: float = 0.0015  # slope floor, per step, relative to mean
+    _pts: list = field(default_factory=list)
+
+    def update(self, x: float) -> bool:
+        self._pts.append(float(x))
+        if len(self._pts) > self.window:
+            self._pts.pop(0)
+        n = len(self._pts)
+        if n < self.min_points:
+            return False
+        y = np.asarray(self._pts, dtype=np.float64)
+        t = np.arange(n, dtype=np.float64)
+        tc = t - t.mean()
+        ybar = float(y.mean())
+        stt = float((tc * tc).sum())
+        b = float((tc * (y - ybar)).sum()) / stt
+        if b <= self.rel_slope_min * max(abs(ybar), 1e-12):
+            return False
+        resid = y - (ybar + b * tc)
+        dof = max(n - 2, 1)
+        se = math.sqrt(max(float((resid * resid).sum()) / dof, 1e-24) / stt)
+        return b / max(se, 1e-12) > self.sig
+
+    def discard_last(self):
+        """Drop the last (filtered-benign) point from the trend window."""
+        if self._pts:
+            self._pts.pop()
+
+    def rescale(self, scale: float):
+        """Carry the window across a reconfiguration: every point rescaled by
+        the predicted healthy-time ratio, so the trend of the underlying
+        degradation survives the plan change."""
+        if scale > 0.0 and math.isfinite(scale):
+            self._pts = [p * scale for p in self._pts]
+        else:
+            self._pts = []
+
+    def reset(self):
+        self._pts = []

@@ -71,12 +71,15 @@ class HeartbeatMonitor:
     node_last_seen: dict = field(default_factory=dict)
     failed_devices: set = field(default_factory=set)
     failed_nodes: set = field(default_factory=set)
+    device_node: dict = field(default_factory=dict)  # device_id -> node_id
     on_failstop: Optional[Callable] = None  # callback(list[device_id], now)
 
     def register_node(self, node_id: int, device_ids: list) -> NodeMonitor:
         mon = NodeMonitor(node_id, list(device_ids), self.interval, self.miss_threshold)
         self.nodes[node_id] = mon
         self.node_last_seen[node_id] = -1.0
+        for d in device_ids:
+            self.device_node[d] = node_id
         return mon
 
     # -------------------------------------------------------------- ingest
@@ -92,6 +95,34 @@ class HeartbeatMonitor:
     def kill_node(self, node_id: int):
         """Simulate a node crash: its agent stops beating entirely."""
         self.nodes[node_id].alive = False
+
+    # -------------------------------------------------------------- revive
+    def revive(self, device_id, now: float = 0.0):
+        """A repaired device re-announces itself (elastic rejoin): clear the
+        failed state so its *next* fail-stop is detectable again. Without
+        this, ``failed_devices`` / ``DeviceHB.failed`` were never cleared and
+        a flapping or renewal-process device could silently die a second
+        time. The device is credited a fresh beat at ``now`` so it is not
+        instantly re-failed before its first post-rejoin heartbeat."""
+        nid = self.device_node.get(device_id)
+        if nid is None:
+            return
+        if nid in self.failed_nodes or not self.nodes[nid].alive:
+            self.revive_node(nid, now)
+        hb = self.nodes[nid].state[device_id]
+        hb.failed = False
+        hb.missed = 0
+        hb.last_beat = now
+        self.failed_devices.discard(device_id)
+
+    def revive_node(self, node_id: int, now: float = 0.0):
+        """Restore a node agent's side channel (node repaired / rack power
+        back). Devices on the node stay individually failed until they are
+        revived themselves."""
+        self.failed_nodes.discard(node_id)
+        mon = self.nodes[node_id]
+        mon.alive = True
+        self.node_last_seen[node_id] = now
 
     # --------------------------------------------------------------- sweep
     def sweep(self, now: float) -> list:

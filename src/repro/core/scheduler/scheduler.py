@@ -65,11 +65,18 @@ class Scheduler:
 
     # ------------------------------------------------------------ adaptation
     def adapt(self, plan: ParallelPlan, speeds: dict, *,
-              failed=frozenset()) -> AdaptationPlan:
-        """speeds: {device_id: p_i}; failed: fail-stop device ids (speed 0)."""
+              failed=frozenset(), quarantined=frozenset()) -> AdaptationPlan:
+        """speeds: {device_id: p_i}; failed: fail-stop device ids (speed 0);
+        quarantined: lifecycle-quarantined devices — excluded from plans (and
+        the standby pool) exactly like failed ones, even if a rejoin has made
+        them physically alive, so the Scheduler stops replanning around
+        flappers until their quarantine expires."""
         t0 = time.perf_counter()
-        failed = set(failed) | {d for d, v in speeds.items() if v <= 0.0}
+        failed = (set(failed) | {d for d, v in speeds.items() if v <= 0.0}
+                  | set(quarantined))
         notes = []
+        if quarantined:
+            notes.append(f"quarantined (excluded): {sorted(quarantined)}")
 
         # ---- 1. TP: reconfigure every affected group --------------------
         new_replicas = []

@@ -3,7 +3,8 @@ hierarchy, and the workload-aware filter (the paper's Table 4/5 behaviour)."""
 import numpy as np
 import pytest
 
-from repro.core.detector.changepoint import BOCPD, CusumDetector
+from repro.core.detector.changepoint import (BOCPD, CusumDetector,
+                                             SlopeDriftDetector)
 from repro.core.detector.detector import Detector
 from repro.core.detector.heartbeat import HeartbeatMonitor
 from repro.core.detector.predictor import MicroBatchTimePredictor
@@ -61,6 +62,76 @@ def test_cusum_no_false_fire_on_noise():
     det = CusumDetector(warmup=10)
     fires = sum(det.update(1.0 + 0.02 * rng.normal()) for _ in range(300))
     assert fires == 0
+
+
+def test_cusum_discard_last_rewinds_state():
+    """Regression: discard_last was a no-op (`_s = max(0.0, _s)`), so a
+    filtered-benign point either kept its z-increment or — when it fired —
+    erased all accumulated evidence. It must restore the pre-point state."""
+    det = CusumDetector(warmup=10)
+    for _ in range(10):
+        det.update(1.0)
+    for _ in range(4):  # accumulate genuine drift evidence (below threshold)
+        det.update(1.0 + 0.008)
+    s_before = det._s
+    assert s_before > 0.0
+    fired = det.update(2.0)  # a one-off spike pushes it over the threshold
+    assert fired and det._s == 0.0  # fire resets
+    det.discard_last()
+    assert det._s == pytest.approx(s_before)  # evidence restored, not erased
+
+
+def test_cusum_s_stays_bounded_under_filtered_benign_runs():
+    """Property (satellite): an arbitrarily long run of filtered-benign
+    points leaves `_s` bounded — each discard_last fully rewinds the point,
+    so benign fluctuations can never accumulate toward a spurious change
+    point."""
+    rng = np.random.default_rng(7)
+    det = CusumDetector(warmup=10)
+    for _ in range(10):
+        det.update(1.0 + 0.01 * rng.normal())
+    baseline_s = det._s
+    for _ in range(500):
+        det.update(1.0 + abs(0.5 * rng.normal()))  # every point suspicious
+        det.discard_last()  # ... and every point filtered benign
+        assert det._s == pytest.approx(baseline_s)
+        assert 0.0 <= det._s <= det.h
+
+
+def test_cusum_carried_baseline_rescales_and_keeps_evidence():
+    det = CusumDetector(warmup=10)
+    for _ in range(10):
+        det.update(1.0)
+    for _ in range(4):
+        det.update(1.03)
+    carried = det.carried(2.0)
+    assert carried._frozen
+    assert carried._mean == pytest.approx(2.0 * det._mean)
+    assert carried._std == pytest.approx(2.0 * det._std)
+    assert carried._s == pytest.approx(det._s)  # std-units: scale-invariant
+    fresh = CusumDetector(warmup=10).carried(2.0)  # never frozen -> fresh
+    assert not fresh._frozen and fresh._s == 0.0
+
+
+def test_slope_drift_fires_on_ramp_not_noise():
+    rng = np.random.default_rng(11)
+    det = SlopeDriftDetector()
+    assert not any(det.update(1.0 + 0.01 * rng.normal()) for _ in range(80))
+    det.reset()
+    fired_at = None
+    x = 1.0
+    for i in range(60):
+        x += 0.004  # ~0.4%/step creep: far below any single-step threshold
+        if det.update(x + 0.01 * rng.normal()):
+            fired_at = i
+            break
+    assert fired_at is not None
+
+    det2 = SlopeDriftDetector()
+    for _ in range(40):
+        det2.update(1.0 + 0.01 * rng.normal())
+    det2.rescale(3.0)
+    assert all(2.5 < p < 3.5 for p in det2._pts)
 
 
 # ---------------------------------------------------------------- heartbeat
@@ -157,3 +228,81 @@ def test_failstop_report_via_heartbeat():
         det.heartbeat.node_beat(0, float(t))
     rep = det.poll_failstop(6.0)
     assert rep is not None and rep.kind == "fail-stop" and 1 in rep.devices
+
+
+def test_false_alarm_discards_changepoint_state():
+    """Regression (satellite): the false-alarm branch popped the series but
+    left the contaminated point in the change-point detector."""
+    det = _mk_detector(lambda w: 1.0, lambda it: [])  # validation finds nothing
+    for i in range(12):
+        det.observe_iteration(i, 1.0, 1.0)
+    s_before = det._cpd._s
+    det.observe_iteration(12, 1.9, 1.0)  # spike -> validation -> false alarm
+    assert det.stats.false_alarms == 1
+    assert det._cpd._s == pytest.approx(s_before)  # state rewound
+    assert len(det._series) == 12  # spike removed from the series
+
+
+def test_heartbeat_revive_makes_second_failstop_detectable():
+    """Regression (satellite): failed state was never cleared on rejoin, so
+    the same device's second fail-stop was silently undetectable."""
+    hb = HeartbeatMonitor(interval=1.0, miss_threshold=3)
+    hb.register_node(0, [0, 1])
+    for t in range(3):
+        for d in (0, 1):
+            hb.device_beat(0, d, float(t))
+        hb.node_beat(0, float(t))
+    # device 1 stops beating -> first fail-stop
+    for t in range(3, 7):
+        hb.device_beat(0, 0, float(t))
+        hb.node_beat(0, float(t))
+    assert hb.sweep(7.0) == [1]
+    # repaired + revived: beats again, then dies AGAIN
+    hb.revive(1, 8.0)
+    assert 1 not in hb.failed_devices
+    for t in range(8, 11):
+        for d in (0, 1):
+            hb.device_beat(0, d, float(t))
+        hb.node_beat(0, float(t))
+    for t in range(11, 16):
+        hb.device_beat(0, 0, float(t))
+        hb.node_beat(0, float(t))
+    assert hb.sweep(15.0) == [1], "second fail-stop must be re-detected"
+
+
+def test_heartbeat_revive_node_restores_channel():
+    hb = HeartbeatMonitor(interval=1.0, miss_threshold=3)
+    hb.register_node(0, [0, 1])
+    hb.register_node(1, [2, 3])
+    for t in range(3):
+        for d in range(4):
+            hb.device_beat(d // 2, d, float(t))
+        hb.node_beat(0, float(t))
+        hb.node_beat(1, float(t))
+    hb.kill_node(1)
+    assert set(hb.sweep(4.0)) == {2, 3}
+    hb.revive(2, 5.0)  # device revive on a dead node revives the node too
+    assert 1 not in hb.failed_nodes and hb.nodes[1].alive
+    assert 2 not in hb.failed_devices
+    assert 3 in hb.failed_devices  # its peer stays individually failed
+
+
+def test_repeat_failstop_detected_twice_in_sim():
+    """Regression (satellite): end-to-end — the same device fail-stops,
+    rejoins and fail-stops again; both fail-stops must be *detected* (belief
+    flips to 0 twice), which the never-cleared heartbeat state prevented."""
+    from repro.cluster.scenarios import TransientFlap
+    from repro.cluster.simulator import SimConfig, TrainingSim
+
+    cfg = SimConfig(dp=2, pp=4, tp=4, n_layers=40, n_microbatches=8,
+                    seq_len=8192, noise=0.01, seed=0)
+    sim = TrainingSim("resihp", cfg,
+                      policy_kwargs={"plan_overhead_fixed": 0.25})
+    sim.apply_scenario(TransientFlap(device=5, at=10.0, n_flaps=2,
+                                     down_time=6.0, up_time=15.0))
+    sim.run(80, stop_on_abort=False)
+    detections = [e[1] for r in sim.trace for e in r.events
+                  if e[0] == "fail-stop-detected" and 5 in e[1]]
+    assert len(detections) == 2, (
+        f"expected both fail-stops of the flapping device detected, "
+        f"got {len(detections)}")

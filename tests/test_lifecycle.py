@@ -1,0 +1,242 @@
+"""Failure-lifecycle subsystem (flap quarantine, ramp-aware drift detection,
+rejoin admission) — the ISSUE-3 acceptance criteria plus unit coverage for
+the LifecycleManager state machine.
+
+System-level tests run the benchmark-scale config (iterations ~0.8 s of
+simulated time, so heartbeat windows and scenario spans line up the way the
+bench sweeps use them) with a fixed seed: every assertion is deterministic.
+"""
+import pytest
+
+from repro.cluster import scenarios
+from repro.cluster.scenarios import FailStop, Rejoin, TransientFlap
+from repro.cluster.simulator import SimConfig, TrainingSim
+from repro.core.detector.lifecycle import (
+    HEALTHY,
+    QUARANTINED,
+    READMITTED,
+    SUSPECT,
+    LifecycleConfig,
+    LifecycleManager,
+)
+
+CFG = SimConfig(dp=2, pp=4, tp=4, n_layers=40, n_microbatches=8,
+                seq_len=8192, noise=0.01, seed=0)
+BASE_KW = {"plan_overhead_fixed": 0.25}
+
+
+def _run(policy_kwargs, scenario, iters=200):
+    sim = TrainingSim("resihp", CFG,
+                      policy_kwargs={**BASE_KW, **policy_kwargs})
+    sim.apply_scenario(scenario)
+    sim.run(iters, stop_on_abort=False)
+    return sim
+
+
+# ------------------------------------------------------------ flap quarantine
+def test_flapping_needs_at_least_2x_fewer_validations():
+    """Acceptance: with the lifecycle enabled, flapping stragglers cost at
+    most half the validation passes of baseline ResiHP (quarantine keeps the
+    flappers out of the plan; the debounce drops pre-detection stall alarms),
+    while the persistent straggler is still detected."""
+    span = 200.0
+    base = _run({}, scenarios.get("flapping_stragglers", span=span))
+    lc = _run({"lifecycle": True},
+              scenarios.get("flapping_stragglers", span=span))
+    assert base.detector.stats.validations >= 2
+    assert 2 * lc.detector.stats.validations <= base.detector.stats.validations
+    # device 7 (the persistent 0.55x straggler) is still caught
+    slow = [d for r in lc.detector.reports if r.kind == "fail-slow"
+            for d, _ in r.devices]
+    assert 7 in slow
+    assert lc.lifecycle.stats.quarantines >= 1
+
+
+def test_quarantine_excludes_flapper_from_plans():
+    """While quarantined, a physically-alive device stays out of the plan
+    (belief failed, no replanning around it)."""
+    flap = TransientFlap(device=3, at=10.0, n_flaps=3, down_time=5.0,
+                         up_time=12.0)
+    sim = TrainingSim("resihp", CFG, policy_kwargs={
+        **BASE_KW, "lifecycle": LifecycleConfig(flap_threshold=2)})
+    sim.apply_scenario(flap)
+    saw_quarantined_alive = False
+    for _ in range(120):
+        sim.step()
+        if (sim.lifecycle.is_quarantined(3, sim.now)
+                and sim.cluster.devices[3].alive):
+            saw_quarantined_alive = True
+            assert sim.known_speeds[3] == 0.0  # belief stays failed
+            assert 3 not in sim._decision.plan.devices
+    assert saw_quarantined_alive
+    assert sim.lifecycle.stats.quarantines >= 1
+
+
+# --------------------------------------------------------- ramp-aware drift
+def test_slow_ramps_detected_before_ramp_completion():
+    """Acceptance: with the lifecycle drift policy, every slow_ramp_mix ramp
+    is reported before its ramp completes; baseline ResiHP only catches the
+    first ramp long after completion."""
+    span = 200.0
+    # slow_ramp_mix timeline (see scenarios.py): device -> (at, ramp) * span
+    ramps = {2: (0.10 * span, 0.15 * span),
+             9: (0.35 * span, 0.20 * span),
+             14: (0.65 * span, 0.10 * span)}
+    lc = _run({"lifecycle": True}, scenarios.get("slow_ramp_mix", span=span))
+    first_report = {}
+    for r in lc.detector.reports:
+        if r.kind != "fail-slow":
+            continue
+        for d, _ in r.devices:
+            first_report.setdefault(d, r.time)
+    for dev, (at, ramp) in ramps.items():
+        assert dev in first_report, f"ramping device {dev} never detected"
+        assert first_report[dev] < at + ramp, (
+            f"device {dev} detected at {first_report[dev]:.1f}s, "
+            f"after ramp completion {at + ramp:.1f}s")
+    assert lc.detector.stats.drift_alarms >= 1
+    assert lc.detector.stats.carried_rebaselines >= 1
+
+    base = _run({}, scenarios.get("slow_ramp_mix", span=span))
+    base_first = {}
+    for r in base.detector.reports:
+        if r.kind == "fail-slow":
+            for d, _ in r.devices:
+                base_first.setdefault(d, r.time)
+    at2, ramp2 = ramps[2]
+    assert base_first.get(2, float("inf")) > at2 + ramp2  # the paper gap
+
+
+# --------------------------------------------------------- rejoin admission
+def test_rejoin_admission_enters_belief_at_measured_speed():
+    """A device that comes back at 60% speed enters beliefs at 60% with the
+    admission probe — and at the wrong 1.0 without it (the paper gap)."""
+    scen = FailStop(at=5.0, device=3) + Rejoin(device=3, at=15.0, speed=0.6)
+    beliefs = {}
+    for label, kw in (("lc", {"lifecycle": True}), ("base", {})):
+        sim = TrainingSim("resihp", CFG, policy_kwargs={**BASE_KW, **kw})
+        sim.apply_scenario(scen)
+        while not any(ev.kind == "rejoin" for ev in sim.event_log):
+            sim.step()
+        beliefs[label] = sim.known_speeds[3]
+        assert sim.cluster.devices[3].effective == pytest.approx(0.6)
+    assert beliefs["lc"] == pytest.approx(0.6)
+    assert beliefs["base"] == 1.0
+
+
+def test_admission_probe_charges_time_and_counts():
+    sim = TrainingSim("resihp", CFG, policy_kwargs={**BASE_KW,
+                                                    "lifecycle": True})
+    sim.apply_scenario(FailStop(at=5.0, device=3)
+                       + Rejoin(device=3, at=15.0, speed=0.6))
+    sim.run(40, stop_on_abort=False)
+    assert sim.lifecycle.stats.probes >= 1
+    assert sim.lifecycle.stats.degraded_admissions >= 1
+    assert sim.lifecycle.histories[3].state == READMITTED
+
+
+# ------------------------------------------------- LifecycleManager unit
+def test_manager_quarantine_backoff_doubles():
+    speeds = {5: 0.9}  # comes back degraded: backoff level is retained
+    cfg = LifecycleConfig(flap_threshold=2, backoff_base_s=30.0,
+                          backoff_factor=2.0, probe_cost_s=0.25)
+    mgr = LifecycleManager(cfg=cfg, probe_fn=lambda d: speeds[d])
+    mgr.record_failstop(5, 10.0)
+    assert mgr.history(5).state == SUSPECT
+    dec = mgr.on_rejoin(5, 12.0)
+    assert dec.admit and dec.speed == 0.9  # one fail-stop: not yet a flapper
+    mgr.record_failstop(5, 20.0)
+    dec = mgr.on_rejoin(5, 22.0)  # second recent fail-stop: quarantine
+    assert not dec.admit and dec.state == QUARANTINED
+    assert dec.until == pytest.approx(22.0 + 30.0)
+    # bouncing back mid-quarantine is absorbed, not re-planned
+    dec2 = mgr.on_rejoin(5, 30.0)
+    assert not dec2.admit
+    assert mgr.stats.rejoins_deferred == 1
+    assert mgr.quarantined(30.0) == frozenset({5})
+    # release probe finds it up (degraded) -> readmitted at measured speed
+    assert mgr.poll_releases(40.0) == []  # still serving quarantine
+    rel = mgr.poll_releases(53.0)
+    assert len(rel) == 1 and rel[0].admit and rel[0].speed == 0.9
+    assert mgr.history(5).state == READMITTED
+    # a second quarantine doubles the backoff (degraded readmit kept level 1)
+    mgr.record_failstop(5, 60.0)
+    mgr.record_failstop(5, 70.0)
+    dec3 = mgr.on_rejoin(5, 72.0)
+    assert not dec3.admit
+    assert dec3.until == pytest.approx(72.0 + 60.0)  # level 2: base * factor
+
+
+def test_manager_clean_readmit_resets_backoff():
+    """A full-speed readmission after serving quarantine resets the backoff
+    level: a device that flaps again hours later starts at the base backoff,
+    not the escalated one."""
+    speeds = {5: 1.0}
+    cfg = LifecycleConfig(flap_threshold=2, backoff_base_s=30.0,
+                          backoff_factor=2.0)
+    mgr = LifecycleManager(cfg=cfg, probe_fn=lambda d: speeds[d])
+    mgr.record_failstop(5, 10.0)
+    mgr.on_rejoin(5, 12.0)
+    mgr.record_failstop(5, 20.0)
+    assert not mgr.on_rejoin(5, 22.0).admit  # quarantine #1, 30 s
+    rel = mgr.poll_releases(53.0)
+    assert rel[0].admit and rel[0].speed == 1.0
+    assert mgr.history(5).quarantine_level == 0
+    # new flap sequence much later: backoff starts over at the base
+    mgr.record_failstop(5, 500.0)
+    mgr.record_failstop(5, 510.0)
+    dec = mgr.on_rejoin(5, 512.0)
+    assert not dec.admit
+    assert dec.until == pytest.approx(512.0 + 30.0)
+
+
+def test_manager_release_probe_extends_quarantine_for_dead_device():
+    speeds = {5: 0.0}
+    cfg = LifecycleConfig(flap_threshold=1, backoff_base_s=10.0)
+    mgr = LifecycleManager(cfg=cfg, probe_fn=lambda d: speeds[d])
+    mgr.record_failstop(5, 0.0)
+    dec = mgr.on_rejoin(5, 1.0)
+    assert not dec.admit  # flap_threshold=1: first rejoin quarantines
+    rel = mgr.poll_releases(12.0)  # probe measures 0.0 -> still down
+    assert len(rel) == 1 and not rel[0].admit
+    assert mgr.history(5).state == QUARANTINED
+    assert mgr.history(5).quarantine_until > 12.0
+    speeds[5] = 0.8
+    rel = mgr.poll_releases(40.0)
+    assert len(rel) == 1 and rel[0].admit
+    assert rel[0].speed == pytest.approx(0.8)
+
+
+def test_manager_healthy_device_untracked():
+    mgr = LifecycleManager(probe_fn=lambda d: 1.0)
+    assert mgr.quarantined(0.0) == frozenset()
+    assert not mgr.is_quarantined(3, 0.0)
+    assert mgr.history(3).state == HEALTHY
+
+
+# ------------------------------------------------------------- determinism
+def test_lifecycle_engine_parity():
+    """The lifecycle is engine-independent: python vs fast (which also
+    exercises fastsim.StageSpeedCache) must agree bit-for-bit with it on."""
+    streams = []
+    for engine in ("python", "fast"):
+        sim = TrainingSim("resihp", CFG, engine=engine,
+                          policy_kwargs={**BASE_KW, "lifecycle": True})
+        sim.apply_scenario(scenarios.get("flapping_stragglers", span=100.0))
+        sim.run(80, stop_on_abort=False)
+        streams.append(([(r.iteration, r.t_start, r.duration, r.throughput)
+                         for r in sim.trace],
+                        sim.detector.stats.as_dict(),
+                        sim.lifecycle.stats.as_dict()))
+    assert streams[0] == streams[1]
+
+
+def test_lifecycle_run_is_deterministic():
+    span = 120.0
+    runs = [_run({"lifecycle": True},
+                 scenarios.get("flapping_stragglers", span=span), iters=80)
+            for _ in range(2)]
+    a, b = runs
+    assert [r.duration for r in a.trace] == [r.duration for r in b.trace]
+    assert a.detector.stats.as_dict() == b.detector.stats.as_dict()
+    assert a.lifecycle.stats.as_dict() == b.lifecycle.stats.as_dict()
