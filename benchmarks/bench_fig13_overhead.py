@@ -1,6 +1,13 @@
 """Fig. 13: system overhead — Detector per-iteration tax, Scheduler planning
 time (measured, real code), communication-group reconstruction (measured
-engine apply_plan), layer-transfer volume/time during reconfiguration."""
+engine apply_plan), layer-transfer volume/time during reconfiguration.
+
+Also refits the :class:`~repro.core.scheduler.scheduler.PlanOverheadModel`
+planning-cost curve (the deterministic replacement for charging measured
+wall-clock into simulated time, ``ResiHPPolicy(plan_overhead_model=...)``)
+against the fresh measurements and reports both the fit error and the drift
+of the checked-in default coefficients — so the model cannot silently rot as
+the Scheduler changes."""
 from __future__ import annotations
 
 import time
@@ -10,7 +17,7 @@ import numpy as np
 from benchmarks.common import MODELS, sim_config, write_result
 from repro.core.recovery import transfer_plan
 from repro.core.scheduler.plan import initial_plan
-from repro.core.scheduler.scheduler import Scheduler
+from repro.core.scheduler.scheduler import PlanOverheadModel, Scheduler
 
 
 def planning_overhead(model: str, *, n=20, seed=0):
@@ -70,10 +77,28 @@ def group_reconstruction(*, seed=0):
 def main(quick=False):
     out, rows = {}, []
     models = ["qwen2.5-7b", "qwen2.5-14b", "qwen2.5-32b"]
+    samples = []
     for m in models:
         t = planning_overhead(m, n=8 if quick else 20)
         out[f"planning/{m}"] = t
+        cfg = sim_config(m)
+        samples.append((cfg.n_devices, cfg.n_layers, t))
         rows.append((f"fig13/planning_s/{m}", round(t, 4), "measured"))
+    # modeled planning-cost curve: refit on the fresh measurements and report
+    # the drift of the checked-in default coefficients
+    fitted = PlanOverheadModel.fit(samples)
+    default = PlanOverheadModel()
+    drift = max(abs(fitted.predict(d, layers) - default.predict(d, layers))
+                / max(fitted.predict(d, layers), 1e-12)
+                for d, layers, _ in samples)
+    out["plan_overhead_model"] = {
+        "coef": fitted.coef, "intercept": fitted.intercept,
+        "fit_mape": fitted.fit_mape, "default_drift": drift,
+    }
+    rows.append(("fig13/plan_overhead_model",
+                 f"{fitted.coef:.3f}",
+                 f"intercept={fitted.intercept:.3f} "
+                 f"mape={fitted.fit_mape:.1%} default_drift={drift:.1%}"))
     for arch in ["qwen3-8b", "qwen3-moe-30b-a3b"] + ([] if quick else ["grok-1-314b"]):
         r = layer_transfer(arch)
         out[f"layer_transfer/{arch}"] = r

@@ -1,18 +1,28 @@
 """Scenario sweep: failure families no paper figure covers — correlated rack
 storms, transient flap-then-recover cycles, slow-ramp straggler mixes, a
-Poisson background storm and degraded rejoins — ResiHP (with and without the
-failure-lifecycle subsystem) vs the strengthened baselines.
+Poisson background storm, degraded rejoins and the per-device hazard
+families (aging fleets, lemon tails, infant mortality) — ResiHP (with and
+without the failure-lifecycle / hazard subsystems) vs the strengthened
+baselines.
 
 These stress exactly the behaviors the fleet literature reports (ByteDance's
-correlated infra faults, ElasWave's elastic rejoin) and that the Fig. 9-14
-protocols never exercise: co-located simultaneous fail-stops, devices that
-bounce between dead and healthy, degradations that creep in over minutes
-instead of arriving as a step, and repaired devices that return below peak.
+correlated infra faults, ElasWave's elastic rejoin, per-device age-dependent
+MTTF) and that the Fig. 9-14 protocols never exercise: co-located
+simultaneous fail-stops, devices that bounce between dead and healthy,
+degradations that creep in over minutes instead of arriving as a step,
+repaired devices that return below peak, and failures that *recur* on the
+same worn parts.
 
 ``resihp+lc`` is ResiHP with ``ResiHPPolicy(lifecycle=...)`` enabled (flap
 quarantine + ramp-aware drift + rejoin admission — default-off elsewhere);
-its rows carry the lifecycle columns (validations, false alarms, quarantines,
-probes) so detector regressions are visible next to throughput.
+``resihp+hz`` adds ``ResiHPPolicy(hazard=...)`` on top (hazard-keyed
+quarantine + risk-aware placement): the risk-aware planner, against
+``resihp+lc`` as the hazard-blind reference. Rows carry the lifecycle /
+detector columns (validations, false alarms, quarantines, probes) plus the
+session throughput (samples per second of *elapsed* time, reconfiguration
+and stall charges included) — the metric a repeat-offender's
+reconfiguration storm actually hurts, and the one the hazard policies win
+on ``aging_fleet``.
 """
 from __future__ import annotations
 
@@ -31,13 +41,20 @@ SWEEP = {
         "poisson_storm", rate=4.0 / span, t_end=span, mttr=0.25 * span),
     "degraded_rejoins": lambda span: scenarios.get(
         "degraded_rejoins", span=span),
+    # per-device hazard families (PR 4): age-dependent MTTF, repeat offenders
+    "aging_fleet": lambda span: scenarios.get("aging_fleet", span=span),
+    "lemon_devices": lambda span: scenarios.get("lemon_devices", span=span),
+    "infant_mortality": lambda span: scenarios.get(
+        "infant_mortality", span=span),
 }
 
-# policy label -> (policy name, policy kwargs); the lifecycle runs are the
-# only place the default-off ResiHPPolicy(lifecycle=...) switch is on
+# policy label -> (policy name, policy kwargs); the lifecycle/hazard runs are
+# the only place the default-off ResiHPPolicy(lifecycle=/hazard=) switches
+# are on
 POLICIES = {
     "resihp": ("resihp", {}),
     "resihp+lc": ("resihp", {"lifecycle": True}),
+    "resihp+hz": ("resihp", {"hazard": True}),
     "recycle+": ("recycle+", {}),
     "oobleck+": ("oobleck+", {}),
 }
@@ -54,6 +71,7 @@ def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
     st = sim.detector.stats
     out = {
         "throughput": sim.avg_throughput(skip=2),
+        "session_throughput": sim.session_throughput(skip=2),
         "aborted": sim.aborted,
         "n_events": len(trace),
         "events": trace.as_tuples(),
@@ -64,29 +82,45 @@ def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
     return out
 
 
+# the hazard families model slow per-device renewal dynamics (lemon repair/
+# re-fail cycles, quarantine backoffs): they need the full 160-iteration
+# session to play out, so they keep it even in --quick mode (still seconds
+# of wall clock on the fast engine)
+HAZARD_SCENARIOS = ("aging_fleet", "lemon_devices", "infant_mortality")
+
+
 def main(quick=False, engine="fast"):
     models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
     iters = 80 if quick else 160
     out, rows = {}, []
     for model in models:
         for sc in SWEEP:
-            rs = {p: run(model, sc, p, iters=iters, engine=engine)
+            sc_iters = 160 if sc in HAZARD_SCENARIOS else iters
+            rs = {p: run(model, sc, p, iters=sc_iters, engine=engine)
                   for p in POLICIES}
             out[f"{model}/{sc}"] = rs
             resi = rs["resihp"]["throughput"]
             for p, r in rs.items():
                 t = r["throughput"]
                 det = r["detector"]
+                sess = f"sess={r['session_throughput']:.2f}"
                 if p == "resihp+lc":
                     lc = r.get("lifecycle", {})
                     derived = (f"vals={det['validations']}"
                                f" fa={det['false_alarms']}"
                                f" quar={lc.get('quarantines', 0)}"
-                               f" probes={lc.get('probes', 0)}")
+                               f" probes={lc.get('probes', 0)} {sess}")
+                elif p == "resihp+hz":
+                    lc = r.get("lifecycle", {})
+                    blind = rs["resihp+lc"]["session_throughput"]
+                    derived = (f"quar={lc.get('quarantines', 0)}"
+                               f" deferred={lc.get('rejoins_deferred', 0)}"
+                               f" {sess}"
+                               f" vs_blind={r['session_throughput'] / max(blind, 1e-9):.2f}x")
                 elif p == "resihp":
                     derived = (f"n_events={r['n_events']}"
                                f" vals={det['validations']}"
-                               f" fa={det['false_alarms']}")
+                               f" fa={det['false_alarms']} {sess}")
                 else:
                     derived = f"resihp_speedup={resi / max(t, 1e-9):.2f}x"
                 rows.append((

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.scheduler.plan import ParallelPlan, ReplicaPlan, StagePlan, initial_plan
-from repro.core.scheduler.scheduler import Scheduler
+from repro.core.scheduler.scheduler import PlanOverheadModel, Scheduler
 
 
 @dataclass
@@ -100,10 +100,11 @@ class BasePolicy:
         return min(vals) if vals else 0.0
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset()) -> PolicyDecision:
-        """``excluded``: lifecycle-quarantined devices; only policies with a
-        failure-lifecycle story (ResiHP) act on it — baselines ignore it,
-        mirroring their lack of flap memory (§3 limitations)."""
+               excluded=frozenset(), risk=None) -> PolicyDecision:
+        """``excluded``: lifecycle-quarantined devices; ``risk``: per-device
+        hazard scores from the lifecycle hazard estimator. Only policies with
+        a failure-lifecycle story (ResiHP) act on either — baselines ignore
+        them, mirroring their lack of flap/hazard memory (§3 limitations)."""
         raise NotImplementedError
 
 
@@ -119,7 +120,7 @@ class ReCyclePolicy(BasePolicy):
             self.name = "recycle+"
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset()) -> PolicyDecision:
+               excluded=frozenset(), risk=None) -> PolicyDecision:
         plan = self.plan0
         dead, stage_speeds = [], {}
         eff = dict(speeds)
@@ -169,7 +170,7 @@ class OobleckPolicy(BasePolicy):
             self.name = "oobleck+"
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset()) -> PolicyDecision:
+               excluded=frozenset(), risk=None) -> PolicyDecision:
         plan0 = self.plan0
         pp = plan0.replicas[0].pp
         lost = sum(1 for d in plan0.devices if speeds.get(d, 1.0) <= 0.0)
@@ -236,7 +237,7 @@ class GreyhoundPolicy(BasePolicy):
     handles_failslow: bool = True
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset()) -> PolicyDecision:
+               excluded=frozenset(), risk=None) -> PolicyDecision:
         plan = self.plan0
         pp = plan.replicas[0].pp
         stage_speeds, dead = {}, []
@@ -271,7 +272,7 @@ class AdaptraPolicy(BasePolicy):
     compute_recovery: float = 0.25  # ZB bubble-filling hides a bit of compute
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset()) -> PolicyDecision:
+               excluded=frozenset(), risk=None) -> PolicyDecision:
         plan = self.plan0
         stage_speeds, dead = {}, []
         for r, rep in enumerate(plan.replicas):
@@ -304,6 +305,11 @@ class ResiHPPolicy(BasePolicy):
     # None => charge measured wall-clock planning time (Fig. 13 methodology);
     # a float pins the charge for deterministic replay (golden tests)
     plan_overhead_fixed: Optional[float] = None
+    # modeled planning-cost curve (PlanOverheadModel; ``True`` for the
+    # checked-in default fit): deterministic *and* scale-aware, unlike the
+    # measured charge (nondeterministic) or the fixed pin (a constant).
+    # Resolution order: fixed > model > measured.
+    plan_overhead_model: Optional[object] = None
     scheduler: Optional[Scheduler] = None
     # ablation switches (Fig. 11)
     enable_selective: bool = True
@@ -315,12 +321,27 @@ class ResiHPPolicy(BasePolicy):
     # ``lifecycle=True`` for the default LifecycleConfig or a LifecycleConfig
     # for tuned/ablated policies; TrainingSim builds the manager from it.
     lifecycle: Optional[object] = None
+    # per-device hazard awareness (HazardPolicyConfig; ``True`` for defaults;
+    # default OFF): hazard-keyed quarantine backoff + risk-aware placement,
+    # both fed by the lifecycle's FailureHistory — so enabling ``hazard``
+    # turns the default lifecycle on if it was off.
+    hazard: Optional[object] = None
 
     def __post_init__(self):
         if self.lifecycle is True:
             from repro.core.detector.lifecycle import LifecycleConfig
 
             self.lifecycle = LifecycleConfig()
+        if self.hazard is True:
+            from repro.cluster.hazard import HazardPolicyConfig
+
+            self.hazard = HazardPolicyConfig()
+        if self.hazard and not self.lifecycle:
+            from repro.core.detector.lifecycle import LifecycleConfig
+
+            self.lifecycle = LifecycleConfig()
+        if self.plan_overhead_model is True:
+            self.plan_overhead_model = PlanOverheadModel()
         if self.scheduler is None:
             self.scheduler = Scheduler(
                 layer_costs=list(self.layer_costs), k_min=self.k_min,
@@ -330,12 +351,14 @@ class ResiHPPolicy(BasePolicy):
             )
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset()) -> PolicyDecision:
+               excluded=frozenset(), risk=None) -> PolicyDecision:
         failed = {d for d, v in speeds.items() if v <= 0.0}
         # quarantine exclusion is owned by Scheduler.adapt (it unions
-        # quarantined into failed and records the note)
+        # quarantined into failed and records the note); risk flows through
+        # to the placement tie-breaks (risk-aware planning, hazard switch)
         ad = self.scheduler.adapt(self.plan0, speeds, failed=failed,
-                                  quarantined=frozenset(excluded))
+                                  quarantined=frozenset(excluded),
+                                  device_risk=risk)
         overhead = 0.0
         if changed:
             moved_layers = 0
@@ -343,8 +366,13 @@ class ResiHPPolicy(BasePolicy):
                 zip(self.plan0.replicas[0].stages, ad.plan.replicas[0].stages)
             ):
                 moved_layers += len(set(new.layers) - set(old.layers))
-            plan_s = (ad.plan_overhead_s if self.plan_overhead_fixed is None
-                      else self.plan_overhead_fixed)
+            if self.plan_overhead_fixed is not None:
+                plan_s = self.plan_overhead_fixed
+            elif self.plan_overhead_model is not None:
+                plan_s = self.plan_overhead_model.predict(
+                    len(self.plan0.devices), len(self.layer_costs))
+            else:
+                plan_s = ad.plan_overhead_s
             overhead = (
                 plan_s
                 + self.group_rebuild_s

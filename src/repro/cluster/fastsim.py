@@ -524,6 +524,169 @@ class StageSpeedCache:
         return out
 
 
+class FastHeartbeat:
+    """Vectorized drop-in for :class:`~repro.core.detector.heartbeat.
+    HeartbeatMonitor` (fast engine only — the reference monitor stays the
+    parity anchor on the python engine). This was the last per-device python
+    loop on the 10k+-device sweep path: ``TrainingSim._sync_beliefs`` beat
+    every alive device individually (``device_beat`` + ``node_beat`` per
+    device per iteration) and ``sweep`` walked every ``DeviceHB`` dataclass.
+
+    Here the per-device state is four dense numpy arrays (last-beat time,
+    failed flag, node row, registered flag) plus three per-node arrays;
+    ``beat_all(alive_mask, now)`` replaces the whole beat loop with masked
+    stores and ``sweep`` with a handful of vector comparisons. Semantics are
+    kept operation-for-operation (same float divisions, same node-channel
+    guard on device beats, same whole-node-failure ordering, ``revive`` /
+    ``revive_node`` / ``kill_node`` / ``mark_failed`` identical), so the
+    engine-parity suite pins python vs fast byte-for-byte — exactly like
+    :class:`StageSpeedCache` for ``_true_stage_speeds``.
+
+    Assumes dense integer device ids and nodes registered in ascending
+    device order (what ``TrainingSim`` does), so the ascending ``newly``
+    list matches the reference's registration-order walk. Registration is
+    init-only: unlike the reference monitor, which can adopt a node
+    mid-flight, adding a node after the first beat/sweep would rebuild the
+    state arrays and re-report every known death — so it raises instead.
+    """
+
+    def __init__(self, interval: float = 1.0, miss_threshold: int = 3):
+        self.interval = interval
+        self.miss_threshold = miss_threshold
+        self.on_failstop = None
+        self.failed_devices: set = set()
+        self.failed_nodes: set = set()
+        self.device_node: dict = {}
+        self._node_ids: list = []
+        self._node_row: dict = {}
+        self._node_devices: dict = {}
+        self._arrays = None
+
+    # -------------------------------------------------------- registration
+    def register_node(self, node_id: int, device_ids: list):
+        if self._arrays is not None:
+            raise RuntimeError(
+                "FastHeartbeat registration is init-only: adding a node "
+                "after beats/sweeps started would wipe heartbeat state and "
+                "re-report known deaths (use HeartbeatMonitor for elastic "
+                "scale-out)")
+        self._node_row[node_id] = len(self._node_ids)
+        self._node_ids.append(node_id)
+        self._node_devices[node_id] = list(device_ids)
+        for d in device_ids:
+            self.device_node[d] = node_id
+
+    def _ensure(self):
+        if self._arrays is not None:
+            return
+        n_dev = max(self.device_node, default=-1) + 1
+        n_nodes = len(self._node_ids)
+        self._dev_last = np.full(n_dev, -1.0)
+        self._dev_failed = np.zeros(n_dev, dtype=bool)
+        self._dev_row = np.full(n_dev, -1, dtype=np.intp)
+        self._registered = np.zeros(n_dev, dtype=bool)
+        for d, nid in self.device_node.items():
+            self._dev_row[d] = self._node_row[nid]
+            self._registered[d] = True
+        self._node_last = np.full(n_nodes, -1.0)
+        self._node_alive = np.ones(n_nodes, dtype=bool)
+        self._node_failed = np.zeros(n_nodes, dtype=bool)
+        self._arrays = True
+
+    # -------------------------------------------------------------- ingest
+    def beat_all(self, alive, now: float):
+        """The whole per-iteration beat loop in two masked stores: every
+        alive registered device beats (unless its node channel is down — the
+        reference ``device_beat`` guard) and every node hosting an alive
+        device refreshes its side-channel keepalive (the reference
+        ``node_beat``, which has no such guard)."""
+        self._ensure()
+        alive = np.asarray(alive, dtype=bool)
+        live = alive & self._registered
+        rows = self._dev_row[live]
+        ok = ~self._node_failed & self._node_alive
+        self._dev_last[live & ok[self._dev_row]] = now
+        self._node_last[np.unique(rows)] = now
+
+    def device_beat(self, node_id: int, device_id, now: float,
+                    progress: int = 0):
+        self._ensure()
+        if node_id in self.failed_nodes or not self._node_alive[
+                self._node_row[node_id]]:
+            return
+        self._dev_last[device_id] = now
+
+    def node_beat(self, node_id: int, now: float):
+        self._ensure()
+        self._node_last[self._node_row[node_id]] = now
+
+    def kill_node(self, node_id: int):
+        self._ensure()
+        self._node_alive[self._node_row[node_id]] = False
+
+    def mark_failed(self, device_id):
+        """Out-of-band failure report (validation-as-fail-stop path): the
+        next sweep will not re-report the device."""
+        self._ensure()
+        self._dev_failed[device_id] = True
+        self.failed_devices.add(device_id)
+
+    # -------------------------------------------------------------- revive
+    def revive(self, device_id, now: float = 0.0):
+        self._ensure()
+        nid = self.device_node.get(device_id)
+        if nid is None:
+            return
+        row = self._node_row[nid]
+        if nid in self.failed_nodes or not self._node_alive[row]:
+            self.revive_node(nid, now)
+        self._dev_failed[device_id] = False
+        self._dev_last[device_id] = now
+        self.failed_devices.discard(device_id)
+
+    def revive_node(self, node_id: int, now: float = 0.0):
+        self._ensure()
+        row = self._node_row[node_id]
+        self.failed_nodes.discard(node_id)
+        self._node_failed[row] = False
+        self._node_alive[row] = True
+        self._node_last[row] = now
+
+    # --------------------------------------------------------------- sweep
+    def sweep(self, now: float) -> list:
+        """Both detection levels vectorized. ``floor(x) >= m`` equals
+        ``x >= m`` for integer m and non-negative x, so the reference's
+        ``int(...)`` truncation reduces to a float comparison on the very
+        same division."""
+        self._ensure()
+        act = ~self._node_failed
+        exp_n = np.where(self._node_last >= 0,
+                         (now - self._node_last) / self.interval, np.inf)
+        node_dead = act & (~self._node_alive | (exp_n >= self.miss_threshold))
+        node_ok = act & ~node_dead
+        exp_d = np.where(self._dev_last >= 0,
+                         (now - self._dev_last) / self.interval, np.inf)
+        rows = self._dev_row
+        cand = self._registered & ~self._dev_failed
+        newly_mask = cand & (node_dead[rows]
+                             | (node_ok[rows] & (exp_d >= self.miss_threshold)))
+        ids = np.nonzero(newly_mask)[0]
+        self._node_failed |= node_dead
+        for r in np.nonzero(node_dead)[0]:
+            self.failed_nodes.add(self._node_ids[r])
+        self._dev_failed[ids] = True
+        newly = [int(d) for d in ids]
+        self.failed_devices.update(newly)
+        if newly and self.on_failstop is not None:
+            self.on_failstop(newly, now)
+        return newly
+
+    # --------------------------------------------------------------- stats
+    @property
+    def n_messages_per_interval(self) -> int:
+        return len(self._node_ids)
+
+
 # ========================================================== cost vectorizer
 def make_cost_table(*, alpha, beta, gamma, workload, share, n_layers, mult,
                     jit, true_speed, replica_map=None):

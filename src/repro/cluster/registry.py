@@ -59,6 +59,14 @@ class ClusterState:
     def alive_ids(self) -> list:
         return [i for i, d in self.devices.items() if d.alive]
 
+    def alive_mask(self):
+        """Dense liveness vector over the device ids ``0..n-1`` (insertion
+        order) for the vectorized heartbeat path — one bool per device."""
+        import numpy as np
+
+        return np.fromiter((d.alive for d in self.devices.values()),
+                           dtype=np.bool_, count=len(self.devices))
+
     def node_devices(self, node: int) -> list:
         return [i for i, d in self.devices.items() if d.node == node]
 

@@ -55,6 +55,16 @@ name                    models / used by
 ``degraded_rejoins``    devices fail-stop and return *degraded* (reduced
                         speed): the rejoin-admission stress case —
                         lifecycle sweeps in ``bench_scenarios``
+``aging_fleet``         per-device Weibull wear-out hazard (old fleet, a
+                        lemon tail, imperfect repairs): failures concentrate
+                        on the worn/lemon devices and recur —
+                        the hazard-aware-policy stress case
+                        (``bench_scenarios``)
+``lemon_devices``       memoryless per-device hazard dominated by a small
+                        lemon tail: a few bad parts fail again and again
+                        while the rest of the fleet stays clean
+``infant_mortality``    fresh fleet with a decreasing hazard (Weibull
+                        k < 1): an early failure burst that quiets down
 ======================  ====================================================
 """
 from __future__ import annotations
@@ -66,13 +76,14 @@ from typing import Callable, Iterable, Optional, Sequence
 import numpy as np
 
 from repro.cluster.events import Event, EventTrace, encode_rejoin_speed
+from repro.cluster.hazard import HazardConfig, HazardModel, hazard_event_times
 from repro.cluster.registry import ClusterTopology
 
 __all__ = [
     "FailureScenario", "Compose", "FailStop", "FailSlow", "TransientFlap",
     "NetworkDegrade", "Rejoin", "MixedFailures", "RandomFailSlow",
     "PoissonFailures", "CorrelatedRackStorm", "TimelineScenario",
-    "register", "get", "names",
+    "HazardConfig", "register", "get", "names",
 ]
 
 
@@ -296,6 +307,16 @@ class PoissonFailures(FailureScenario):
       no repairs, so the two modes emit identical event kinds.
 
     Both modes are deterministic for a fixed (topology, seed).
+
+    ``hazard=HazardConfig(...)`` (default **off**: the behaviour above is
+    byte-identical to every pre-hazard release) replaces the global-rate
+    victim pool with per-device age-dependent hazard processes
+    (:class:`~repro.cluster.hazard.HazardModel`): inter-arrival times and
+    victim identity both come from the fleet's competing Weibull renewals,
+    so failures concentrate on old/lemon/worn devices and — with
+    ``renewal=True`` — recur on them. ``rate`` is ignored in hazard mode
+    (the per-device scales set the intensity); ``mix``/``severity``/
+    ``mttr``/``max_events``/``renewal`` keep their meanings.
     """
     rate: float
     t_end: float
@@ -305,8 +326,26 @@ class PoissonFailures(FailureScenario):
     mttr: Optional[float] = None
     max_events: int = 64
     renewal: bool = False
+    hazard: Optional[HazardConfig] = None
+
+    def __repr__(self):
+        # the derived-RNG stream key is crc32(repr(self)): with ``hazard``
+        # unset the repr must stay byte-identical to the pre-hazard
+        # dataclass repr, or every existing PoissonFailures timeline would
+        # silently recompile differently across releases. A set ``hazard``
+        # appends itself, so distinct hazard configs keep distinct streams.
+        s = (f"PoissonFailures(rate={self.rate!r}, t_end={self.t_end!r}, "
+             f"t_start={self.t_start!r}, mix={self.mix!r}, "
+             f"severity={self.severity!r}, mttr={self.mttr!r}, "
+             f"max_events={self.max_events!r}, renewal={self.renewal!r}")
+        if self.hazard is not None:
+            s += f", hazard={self.hazard!r}"
+        return s + ")"
 
     def events(self, topo, rng):
+        if self.hazard is not None:
+            yield from self._hazard_events(topo, rng)
+            return
         t, emitted = self.t_start, 0
         pool = list(rng.permutation(topo.n_devices))
         down: list = []  # (repair-complete time, device) — renewal mode
@@ -336,6 +375,24 @@ class PoissonFailures(FailureScenario):
                 if self.renewal:
                     down.append((t + dt, d))
             emitted += 1
+
+    def _hazard_events(self, topo, rng):
+        """Per-device hazard mode: the fleet's competing Weibull renewal
+        processes pick both the times and the victims. Draw order is fixed
+        (model init, then event times in firing order, then per-event
+        kind/severity), so compilation stays byte-deterministic."""
+        model = HazardModel(self.hazard, topo.n_devices, rng)
+        fails = hazard_event_times(
+            model, rng, t_start=self.t_start, t_end=self.t_end,
+            mttr=self.mttr, renewal=self.renewal, max_events=self.max_events)
+        for t, d, t_rep in fails:
+            if float(rng.uniform()) < self.mix:
+                yield self._ev(t, "fail-stop", d)
+            else:
+                sev = float(rng.uniform(*self.severity))
+                yield self._ev(t, "fail-slow", d, sev)
+            if t_rep is not None:
+                yield self._ev(t_rep, "rejoin", d)
 
 
 @dataclass
@@ -548,3 +605,44 @@ def _poisson_storm(rate: float = 0.05, t_end: float = 160.0, mix: float = 0.5,
                    renewal: bool = False) -> FailureScenario:
     return PoissonFailures(rate=rate, t_end=t_end, mix=mix, mttr=mttr,
                            renewal=renewal)
+
+
+# ------------------------------------------- per-device hazard families (PR 4)
+@register("aging_fleet")
+def _aging_fleet(span: float = 160.0, mix: float = 0.1,
+                 max_events: int = 64) -> FailureScenario:
+    # worn fleet (Weibull k=3, ages spread over 2 spans) with a lemon tail
+    # and imperfect repairs: failures recur on the same few bad devices for
+    # the whole span — the hazard-aware quarantine/placement stress case.
+    # Mostly fail-slow (mix=0.1, the wear-out signature: thermal throttling
+    # and ECC-retirement slowdowns, not crashes), so the fail-stop flap
+    # counter is blind to the repeats while the hazard estimator is not.
+    return PoissonFailures(
+        rate=0.0, t_end=span, mix=mix, mttr=0.06 * span, renewal=True,
+        max_events=max_events, severity=(0.25, 0.5),
+        hazard=HazardConfig(mttf_s=6.0 * span, shape=3.0,
+                            age_spread_s=2.0 * span, lemon_frac=0.08,
+                            lemon_factor=10.0, wear_per_repair=1.5))
+
+
+@register("lemon_devices")
+def _lemon_devices(span: float = 160.0, lemon_frac: float = 0.08,
+                   max_events: int = 24) -> FailureScenario:
+    # memoryless per-device hazard dominated by a small lemon tail: a few
+    # bad parts fail over and over while the rest of the fleet stays clean
+    return PoissonFailures(
+        rate=0.0, t_end=span, mix=0.5, mttr=0.08 * span, renewal=True,
+        max_events=max_events,
+        hazard=HazardConfig(mttf_s=10.0 * span, shape=1.0,
+                            lemon_frac=lemon_frac, lemon_factor=60.0))
+
+
+@register("infant_mortality")
+def _infant_mortality(span: float = 160.0,
+                      max_events: int = 16) -> FailureScenario:
+    # fresh fleet, decreasing hazard (Weibull k<1): an early burn-in burst
+    # that quiets down as survivors age past their infancy
+    return PoissonFailures(
+        rate=0.0, t_end=span, mix=0.5, mttr=0.10 * span, renewal=True,
+        max_events=max_events,
+        hazard=HazardConfig(mttf_s=8.0 * span, shape=0.6))

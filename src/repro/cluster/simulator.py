@@ -27,7 +27,9 @@ import numpy as np
 
 from repro.cluster.baselines import BasePolicy, PolicyDecision, make_policy
 from repro.cluster.events import Event, apply_event
-from repro.cluster.fastsim import FastMigrator, StageSpeedCache, make_cost_table
+from repro.cluster.fastsim import (FastHeartbeat, FastMigrator,
+                                   StageSpeedCache, make_cost_table)
+from repro.cluster.hazard import HazardEstimator
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.workload import WorkloadGen
 from repro.core.detector.changepoint import CusumDetector, SlopeDriftDetector
@@ -120,7 +122,11 @@ class TrainingSim:
         self.rng = np.random.default_rng(cfg.seed + 1)
 
         # ---- detection stack (real code) ----
-        hb = HeartbeatMonitor(interval=1.0, miss_threshold=3)
+        # the fast engine swaps the reference per-device heartbeat monitor
+        # for the vectorized FastHeartbeat (same semantics, parity-pinned);
+        # the python engine keeps the reference as the semantic anchor
+        hb_cls = FastHeartbeat if engine == "fast" else HeartbeatMonitor
+        hb = hb_cls(interval=1.0, miss_threshold=3)
         for n in range(self.topo.n_nodes):
             hb.register_node(n, self.cluster.node_devices(n))
         self._fitted = self._fit_predictor()
@@ -130,11 +136,22 @@ class TrainingSim:
         # is the ElasWave-style rejoin micro-benchmark (ground-truth lookup,
         # cost charged to simulated time like Greyhound's validation pass)
         lc_cfg = getattr(self.policy, "lifecycle", None)
+        # per-device hazard awareness (default-off ``hazard`` switch): the
+        # estimator reads the lifecycle's FailureHistory — hazard-keyed
+        # quarantine inside the manager, risk scores for the Scheduler
+        hz_cfg = getattr(self.policy, "hazard", None)
+        self.hazard_estimator: Optional[HazardEstimator] = (
+            HazardEstimator(hz_cfg) if hz_cfg else None)
         self.lifecycle: Optional[LifecycleManager] = None
         if lc_cfg:
             self.lifecycle = LifecycleManager(
                 cfg=lc_cfg,
-                probe_fn=lambda d: self.cluster.devices[d].effective)
+                probe_fn=lambda d: self.cluster.devices[d].effective,
+                hazard=self.hazard_estimator)
+        # validation doubles as a fail-stop path (lifecycle gate): a
+        # validation pass reports devices it measured dead instead of
+        # leaving them to the heartbeat timeout
+        self._validation_failstop = bool(lc_cfg and lc_cfg.validation_failstop)
 
         dkw = dict(detector_kwargs or {})
         dkw.setdefault("workload_filter", policy_name.lower() == "resihp")
@@ -158,6 +175,11 @@ class TrainingSim:
         # vectorized belief->stage-speed sync (fast engine only; the python
         # engine keeps the reference per-device loop as the parity anchor)
         self._stage_speed_cache = StageSpeedCache() if engine == "fast" else None
+        # cached liveness vector for the vectorized heartbeat path; rebuilt
+        # lazily, and only on iterations where injected events actually fired
+        # (liveness changes flow exclusively through apply_event)
+        self._alive_vec = None
+        self._alive_dirty = True
         # the system's *belief* about device speeds (truth lives in cluster)
         self.known_speeds = {d: 1.0 for d in self.cluster.devices}
         self._belief_dirty = True
@@ -223,12 +245,18 @@ class TrainingSim:
 
     def _validate(self, iteration: int) -> list:
         """Validation phase: localize degraded devices (ground-truth lookup —
-        Greyhound's micro-benchmark pass; the cost is charged by Detector)."""
+        Greyhound's micro-benchmark pass; the cost is charged by Detector).
+        With the lifecycle's ``validation_failstop`` gate, devices the pass
+        measures *dead* are reported too (speed 0.0) — the fail-stop no
+        longer waits out the heartbeat window when a validation already ran."""
         out = []
         for d, dev in self.cluster.devices.items():
             p = dev.effective
             if dev.alive and p < 0.97 and self.known_speeds.get(d, 1.0) > p:
                 out.append((d, p))
+            elif (not dev.alive and self._validation_failstop
+                  and self.known_speeds.get(d, 1.0) > 0.0):
+                out.append((d, 0.0))
         return out
 
     # ------------------------------------------------------------- helpers
@@ -313,6 +341,8 @@ class TrainingSim:
             apply_event(ev, self.cluster, self.now, on_rejoin=self._on_rejoin)
             self.event_log.append(ev)
             fired.append(ev)
+        if fired:
+            self._alive_dirty = True  # liveness may have changed
         return fired
 
     def _expected_time(self, workload, decision) -> float:
@@ -380,12 +410,20 @@ class TrainingSim:
                     self.known_speeds[dec.device] = dec.speed
                     self._belief_dirty = True
                 events.append(("readmitted", (dec.device, dec.speed)))
-        # fail-stop: heartbeat sweep (dead devices stopped beating)
-        for d, dev in self.cluster.devices.items():
-            if dev.alive:
-                node = self.topo.node_of(d)
-                self.detector.heartbeat.device_beat(node, d, self.now, self.it)
-                self.detector.heartbeat.node_beat(node, self.now)
+        # fail-stop: heartbeat sweep (dead devices stopped beating). The fast
+        # engine beats the whole fleet in one vectorized call; the python
+        # engine keeps the reference per-device loop as the parity anchor.
+        if isinstance(self.detector.heartbeat, FastHeartbeat):
+            if self._alive_dirty:
+                self._alive_vec = self.cluster.alive_mask()
+                self._alive_dirty = False
+            self.detector.heartbeat.beat_all(self._alive_vec, self.now)
+        else:
+            for d, dev in self.cluster.devices.items():
+                if dev.alive:
+                    node = self.topo.node_of(d)
+                    self.detector.heartbeat.device_beat(node, d, self.now, self.it)
+                    self.detector.heartbeat.node_beat(node, self.now)
         # dead nodes stop beating entirely
         rep = self.detector.poll_failstop(self.now)
         if rep:
@@ -423,9 +461,14 @@ class TrainingSim:
             old_decision = self._decision
             excluded = (self.lifecycle.quarantined(self.now)
                         if self.lifecycle is not None else frozenset())
+            # per-device hazard view for risk-aware placement ({} -> None:
+            # the hazard-blind planner path stays byte-identical)
+            risk = (self.lifecycle.risk_scores(self.now)
+                    if self.lifecycle is not None else {})
             self._decision = self.policy.decide(self.known_speeds,
                                                 changed=changed,
-                                                excluded=excluded)
+                                                excluded=excluded,
+                                                risk=risk or None)
             self._belief_dirty = False
             if self._decision.reconfig_overhead_s:
                 self.now += self._decision.reconfig_overhead_s
@@ -517,8 +560,24 @@ class TrainingSim:
             drep = self.detector.observe_iteration(self.it, rec.duration, workload, self.now)
             if drep:
                 for d, speed in drep.devices:
-                    self._failslow_backlog.append(
-                        (d, speed, self.it + cfg.failslow_detect_iters - 1))
+                    if speed <= 0.0:
+                        # validation doubled as the fail-stop path: the pass
+                        # measured the device dead, so the belief flips now —
+                        # no heartbeat wait, no second NCCL-stall charge (the
+                        # monitor is told out-of-band so its sweep stays mute,
+                        # and the Detector arms its fail-stop suppression
+                        # window exactly as for a heartbeat detection)
+                        self.detector.heartbeat.mark_failed(d)
+                        self.detector.note_failstop(self.now)
+                        if self.lifecycle is not None:
+                            self.lifecycle.record_failstop(d, self.now)
+                        if self.known_speeds.get(d, 1.0) != 0.0:
+                            self.known_speeds[d] = 0.0
+                            self._belief_dirty = True
+                        rec.events.append(("failstop-via-validation", d))
+                    else:
+                        self._failslow_backlog.append(
+                            (d, speed, self.it + cfg.failslow_detect_iters - 1))
                 rec.events.append(("failslow-report", drep.devices))
 
         self.now += rec.duration if not math.isinf(rec.duration) else 0.0
@@ -569,9 +628,26 @@ class TrainingSim:
 
     # ------------------------------------------------------------- metrics
     def avg_throughput(self, *, skip: int = 0) -> float:
+        """Execution throughput: samples/s over iteration durations only —
+        reconfiguration, stall and probe charges advance ``now`` but are not
+        part of any iteration, so this metric ignores them (the paper's
+        figure convention)."""
         recs = [r for r in self.trace[skip:] if not math.isinf(r.duration)]
         if not recs:
             return 0.0
         total_t = sum(r.duration for r in recs)
         total_s = sum(r.throughput * r.duration for r in recs)
         return total_s / max(total_t, 1e-9)
+
+    def session_throughput(self, *, skip: int = 0) -> float:
+        """End-to-end throughput: samples delivered per second of *elapsed*
+        simulated time, reconfiguration / fail-stop-stall / probe charges
+        included. This is the metric a reconfiguration storm actually hurts
+        — the one the failure-lifecycle and hazard policies optimize."""
+        recs = [r for r in self.trace[skip:] if not math.isinf(r.duration)]
+        if not recs:
+            return 0.0
+        t0 = recs[0].t_start
+        elapsed = max(self.now - t0, 1e-9)
+        total_s = sum(r.throughput * r.duration for r in recs)
+        return total_s / elapsed

@@ -120,6 +120,15 @@ class Detector:
         self._last_failstop_t = now
         return rep
 
+    def note_failstop(self, now: float):
+        """Record an out-of-band fail-stop detection (a validation pass that
+        measured a device dead) so the ``suppress_failstop_s`` window and
+        the pending-validation drop arm exactly as they do for
+        heartbeat-detected deaths — without this, the stall/replan transient
+        of a validation-detected death would charge a second validation and
+        count a false alarm."""
+        self._last_failstop_t = now
+
     # ------------------------------------------------------------ fail-slow
     def observe_iteration(self, iteration: int, observed_s: float, workload,
                           now: float = 0.0) -> Optional[FailureReport]:

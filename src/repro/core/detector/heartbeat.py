@@ -96,6 +96,17 @@ class HeartbeatMonitor:
         """Simulate a node crash: its agent stops beating entirely."""
         self.nodes[node_id].alive = False
 
+    def mark_failed(self, device_id):
+        """Record a device as failed through an out-of-band channel (a
+        validation pass that found it dead — the validation-as-fail-stop
+        path). The next sweep will not re-report it, so the NCCL-timeout
+        stall is not paid twice for a failure the system already knows."""
+        nid = self.device_node.get(device_id)
+        if nid is not None:
+            hb = self.nodes[nid].state[device_id]
+            hb.failed = True
+        self.failed_devices.add(device_id)
+
     # -------------------------------------------------------------- revive
     def revive(self, device_id, now: float = 0.0):
         """A repaired device re-announces itself (elastic rejoin): clear the

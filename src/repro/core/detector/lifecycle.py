@@ -25,6 +25,22 @@ per-device failure *history*. This module provides it:
   :class:`~repro.core.detector.changepoint.SlopeDriftDetector` and
   ``CusumDetector.carried``); the lifecycle manager only carries the flag,
   the Detector owns the mechanics.
+* **Hazard-keyed quarantine** (PR 4) — when the manager is handed a hazard
+  estimator (duck-typed: ``risk``/``should_quarantine``/``backoff_s`` over
+  a device's :class:`FailureHistory`; see
+  :class:`repro.cluster.hazard.HazardEstimator` — injected by the caller so
+  this module stays import-clean of the cluster layer), quarantine *entry*
+  keys on the estimated per-device failure rate instead of the raw fail-stop
+  flap counter — so a part that keeps coming back degraded (fail-slow
+  repeats, which the flap counter never sees) is quarantined too — and the
+  backoff *duration* scales with how far above the quarantine threshold the
+  estimate sits. ``risk_scores()`` exposes the same estimates to the
+  Scheduler for risk-aware placement.
+* **Validation as a fail-stop path** — ``cfg.validation_failstop`` lets a
+  validation pass report dead devices (speed 0) directly: a device that died
+  just before a validation micro-benchmark ran no longer waits for the
+  heartbeat timeout (and its NCCL-stall charge) to enter system beliefs.
+  The simulator owns the mechanics (see ``TrainingSim._validate``).
 
 Lifecycle states per device::
 
@@ -83,6 +99,10 @@ class LifecycleConfig:
     backoff_max_s: float = 1200.0
     probe_cost_s: float = 0.5  # micro-benchmark wall time per probe
     readmit_speed_floor: float = 0.05  # probe below this => still failed
+    # validation doubles as a fail-stop path: a validation pass that finds a
+    # dead device reports it immediately instead of leaving it to time out
+    # its heartbeats (and pay the NCCL-stall charge) — ROADMAP open item
+    validation_failstop: bool = True
 
 
 @dataclass
@@ -135,6 +155,10 @@ class LifecycleManager:
 
     cfg: LifecycleConfig = field(default_factory=LifecycleConfig)
     probe_fn: Optional[Callable] = None
+    # duck-typed hazard estimator (repro.cluster.hazard.HazardEstimator or
+    # anything with risk/should_quarantine/backoff_s and a cfg carrying
+    # ``quarantine``/``planning`` gates). None => flap-counter policy.
+    hazard: Optional[object] = None
     histories: dict = field(default_factory=dict)  # device -> FailureHistory
     stats: LifecycleStats = field(default_factory=LifecycleStats)
 
@@ -163,13 +187,31 @@ class LifecycleManager:
         h.last_probe_speed = float(self.probe_fn(h.device)) if self.probe_fn else 1.0
         return h.last_probe_speed
 
+    def _hazard_quarantine(self) -> bool:
+        return self.hazard is not None and self.hazard.cfg.quarantine
+
+    def _should_quarantine(self, h: FailureHistory, now: float) -> bool:
+        if self._hazard_quarantine():
+            # hazard-keyed entry: the estimated per-device rate (fail-slows
+            # included) crossed the quarantine threshold — not "N fail-stops
+            # in a window"
+            return self.hazard.should_quarantine(h, now)
+        return (h.recent_failstops(now, self.cfg.flap_window_s)
+                >= self.cfg.flap_threshold)
+
     def _enter_quarantine(self, h: FailureHistory, now: float) -> RejoinDecision:
         h.quarantine_level += 1
-        dur = min(
-            self.cfg.backoff_base_s
-            * self.cfg.backoff_factor ** (h.quarantine_level - 1),
-            self.cfg.backoff_max_s,
-        )
+        if self._hazard_quarantine():
+            dur = self.hazard.backoff_s(
+                h, now, base_s=self.cfg.backoff_base_s,
+                max_s=self.cfg.backoff_max_s, level=h.quarantine_level,
+                factor=self.cfg.backoff_factor)
+        else:
+            dur = min(
+                self.cfg.backoff_base_s
+                * self.cfg.backoff_factor ** (h.quarantine_level - 1),
+                self.cfg.backoff_max_s,
+            )
         h.quarantine_until = now + dur
         h.state = QUARANTINED
         self.stats.quarantines += 1
@@ -212,9 +254,7 @@ class LifecycleManager:
             self.stats.rejoins_deferred += 1
             return RejoinDecision(device, admit=False, speed=0.0,
                                   state=QUARANTINED, until=h.quarantine_until)
-        if (self.cfg.quarantine
-                and h.recent_failstops(now, self.cfg.flap_window_s)
-                >= self.cfg.flap_threshold):
+        if self.cfg.quarantine and self._should_quarantine(h, now):
             return self._enter_quarantine(h, now)
         return self._admit(h, now)
 
@@ -266,3 +306,13 @@ class LifecycleManager:
     # --------------------------------------------------------------- intro
     def states(self) -> dict:
         return {d: h.state for d, h in self.histories.items()}
+
+    def risk_scores(self, now: float) -> dict:
+        """Per-device risk view for the Scheduler (``device_risk``): the
+        hazard estimator's rate-over-prior ratio for every device with
+        failure history (1.0 = fleet baseline; unknown devices are implied
+        baseline). Empty when no estimator is attached or planning is off."""
+        if self.hazard is None or not self.hazard.cfg.planning:
+            return {}
+        return {d: self.hazard.risk(h, now)
+                for d, h in self.histories.items()}

@@ -19,6 +19,8 @@ plans; `plan_overhead_s` is measured for the Fig. 13 overhead benchmark.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Optional
@@ -36,6 +38,53 @@ class AdaptationPlan:
     restore_required: bool  # all replicas of some stage are dead (Fig. 8b)
     plan_overhead_s: float
     notes: list = field(default_factory=list)
+
+
+@dataclass(frozen=True)
+class PlanOverheadModel:
+    """Modeled planning-cost curve: a power law ``t = exp(intercept) * x**coef``
+    in the problem size ``x = n_devices * n_layers``, fit (log-log least
+    squares) to the measured ``Scheduler.adapt`` wall times of the Fig. 13
+    overhead benchmark.
+
+    Replaces the *measured* wall-clock planning charge
+    (``AdaptationPlan.plan_overhead_s``, honest but nondeterministic and
+    machine-dependent) with a deterministic prediction at the same scale —
+    closing the ROADMAP item without falling back to a blunt constant the
+    way ``plan_overhead_fixed`` does. ``bench_fig13_overhead`` refits the
+    curve against fresh measurements every run and reports the fit error, so
+    drift between the checked-in default and reality is visible nightly.
+    """
+
+    coef: float = 1.4165360  # power-law exponent over n_devices * n_layers
+    intercept: float = -17.3245871  # log-seconds at x = 1
+    fit_mape: float = 0.0227  # of the default fit (results/fig13_overhead.json)
+
+    def predict(self, n_devices: int, n_layers: int) -> float:
+        return self.predict_x(float(n_devices) * float(n_layers))
+
+    @classmethod
+    def fit(cls, samples) -> "PlanOverheadModel":
+        """``samples``: iterable of (n_devices, n_layers, measured_seconds).
+        Closed-form least squares on (log x, log t)."""
+        pts = [(math.log(max(float(d) * float(layers), 1.0)), math.log(t))
+               for d, layers, t in samples if t > 0]
+        if len(pts) < 2:
+            raise ValueError("PlanOverheadModel.fit needs >= 2 samples")
+        n = len(pts)
+        mx = sum(x for x, _ in pts) / n
+        my = sum(y for _, y in pts) / n
+        sxx = sum((x - mx) ** 2 for x, _ in pts)
+        sxy = sum((x - mx) * (y - my) for x, y in pts)
+        coef = sxy / max(sxx, 1e-18)
+        intercept = my - coef * mx
+        model = cls(coef=coef, intercept=intercept)
+        mape = sum(abs(model.predict_x(math.exp(x)) - math.exp(y))
+                   / math.exp(y) for x, y in pts) / n
+        return dataclasses.replace(model, fit_mape=mape)
+
+    def predict_x(self, x: float) -> float:
+        return math.exp(self.intercept) * max(x, 1.0) ** self.coef
 
 
 def k_min_for(param_bytes_per_layer: float, n_layers_stage: int,
@@ -65,18 +114,27 @@ class Scheduler:
 
     # ------------------------------------------------------------ adaptation
     def adapt(self, plan: ParallelPlan, speeds: dict, *,
-              failed=frozenset(), quarantined=frozenset()) -> AdaptationPlan:
+              failed=frozenset(), quarantined=frozenset(),
+              device_risk=None) -> AdaptationPlan:
         """speeds: {device_id: p_i}; failed: fail-stop device ids (speed 0);
         quarantined: lifecycle-quarantined devices — excluded from plans (and
         the standby pool) exactly like failed ones, even if a rejoin has made
         them physically alive, so the Scheduler stops replanning around
-        flappers until their quarantine expires."""
+        flappers until their quarantine expires.
+        device_risk: optional {device_id: hazard score} from the lifecycle
+        hazard estimator — equal-throughput placement choices (TP membership,
+        standby pull-in) prefer low-hazard devices; None (the default) keeps
+        selection byte-identical to the hazard-blind planner."""
         t0 = time.perf_counter()
         failed = (set(failed) | {d for d, v in speeds.items() if v <= 0.0}
                   | set(quarantined))
         notes = []
         if quarantined:
             notes.append(f"quarantined (excluded): {sorted(quarantined)}")
+        if device_risk:
+            worst = max(device_risk.items(), key=lambda kv: (kv[1], kv[0]))
+            notes.append(f"risk-aware placement over {len(device_risk)} "
+                         f"scored devices (worst d{worst[0]}: {worst[1]:.2f}x)")
 
         # ---- 1. TP: reconfigure every affected group --------------------
         new_replicas = []
@@ -101,7 +159,8 @@ class Scheduler:
                 # pull node-local standbys into the candidate pool (§6.1)
                 pool = list(st.devices) + standby_pool
                 rec: TPReconfig = reconfigure_tp_group(
-                    pool, speeds, k_min=self.k_min, failed=failed)
+                    pool, speeds, k_min=self.k_min, failed=failed,
+                    risk=device_risk)
                 if rec.tp == 0:
                     dead.append((r, s))
                     stages.append(StagePlan((), st.layers))

@@ -11,6 +11,14 @@ normalized throughput p_i (1.0 = healthy peak), the Scheduler:
      synchronize every layer, so a group runs at its slowest member's rate,
      while a larger k scales aggregate compute;
   4. keeps unassigned healthy devices online as node-local standbys.
+
+Risk-aware placement (PR 4, default off): when a per-device hazard view is
+supplied (``risk={device: estimated rate / fleet prior}``, from the failure-
+lifecycle hazard estimator), equal-throughput choices break toward the
+lower-hazard device — Eq. 4 still decides throughput, but among the many
+speed-1.0 candidates the greedy ranking stops being arbitrary and prefers
+devices that are least likely to force the *next* reconfiguration. With
+``risk=None`` the selection is byte-identical to the pre-hazard behaviour.
 """
 from __future__ import annotations
 
@@ -42,11 +50,13 @@ def candidate_degrees(n_survivors: int, k_min: int) -> list:
 
 
 def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
-                         failed=()) -> TPReconfig:
+                         failed=(), risk=None) -> TPReconfig:
     """group: device ids of the original TP group.
     speeds: {device_id: normalized throughput p_i}; fail-stop devices may be
     listed in `failed` or have speed <= 0.
     k_min: memory floor — the minimum TP degree whose shards still fit HBM.
+    risk: optional {device_id: hazard score} — equal-speed ties rank
+    low-hazard first (None => exact legacy ordering).
     """
     failed = set(failed) | {d for d in group if speeds.get(d, 0.0) <= 0.0}
     survivors = [d for d in group if d not in failed]
@@ -54,8 +64,14 @@ def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
     if not ks:
         return TPReconfig((), 0, 0.0, tuple(sorted(survivors)), tuple(sorted(failed)))
 
-    # rank by normalized throughput, healthy (1.0) first
-    ranked = sorted(survivors, key=lambda d: -speeds.get(d, 1.0))
+    # rank by normalized throughput, healthy (1.0) first; with a hazard view,
+    # equal-speed ties prefer the lower-risk device (risk-aware placement)
+    if risk is None:
+        ranked = sorted(survivors, key=lambda d: -speeds.get(d, 1.0))
+    else:
+        ranked = sorted(survivors,
+                        key=lambda d: (-speeds.get(d, 1.0),
+                                       risk.get(d, 1.0)))
     best, best_thru = None, -1.0
     for k in ks:
         sk = ranked[:k]
@@ -68,9 +84,10 @@ def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
                       tuple(sorted(failed)))
 
 
-def backfill_from_standby(reconf: TPReconfig, speeds, *, k_min: int = 1) -> TPReconfig:
+def backfill_from_standby(reconf: TPReconfig, speeds, *, k_min: int = 1,
+                          risk=None) -> TPReconfig:
     """Re-run selection over survivors + standbys (used when a later failure
     hits the group again and the node-local standby pool can help — §6.1
     'reuse them for subsequent intra-node failures')."""
     pool = list(reconf.devices) + list(reconf.standby)
-    return reconfigure_tp_group(pool, speeds, k_min=k_min)
+    return reconfigure_tp_group(pool, speeds, k_min=k_min, risk=risk)

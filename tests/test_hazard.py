@@ -1,0 +1,424 @@
+"""Per-device hazard subsystem: ground-truth sampler determinism and
+covariate behaviour, hazard-off invariance, the observational estimator,
+hazard-keyed quarantine, risk-aware placement, the validation-as-fail-stop
+path, engine parity with the vectorized heartbeat, and the ``aging_fleet``
+acceptance row (risk-aware planner beats the hazard-blind planner)."""
+import numpy as np
+import pytest
+
+from repro.cluster import scenarios
+from repro.cluster.hazard import (
+    HazardConfig,
+    HazardEstimator,
+    HazardModel,
+    HazardPolicyConfig,
+    expected_failures,
+)
+from repro.cluster.registry import ClusterTopology
+from repro.cluster.scenarios import FailSlow, FailStop, PoissonFailures
+from repro.cluster.simulator import SimConfig, TrainingSim
+from repro.core.detector.lifecycle import (
+    QUARANTINED,
+    LifecycleConfig,
+    LifecycleManager,
+)
+from repro.core.scheduler.scheduler import PlanOverheadModel, Scheduler
+from repro.core.scheduler.plan import initial_plan
+from repro.core.scheduler.tp_reconfig import reconfigure_tp_group
+
+TOPO = ClusterTopology(4, 8)  # 32 devices
+
+BENCH_CFG = SimConfig(dp=2, pp=4, tp=4, n_layers=40, n_microbatches=8,
+                      seq_len=8192, noise=0.01, seed=0)
+BASE_KW = {"plan_overhead_fixed": 0.25}
+
+HAZARD_SCENARIOS = ("aging_fleet", "lemon_devices", "infant_mortality")
+
+
+# ======================================================= sampler determinism
+@pytest.mark.parametrize("name", HAZARD_SCENARIOS)
+def test_hazard_scenarios_compile_deterministically(name):
+    a = scenarios.get(name, span=128.0).compile(TOPO, seed=7).to_json()
+    b = scenarios.get(name, span=128.0).compile(TOPO, seed=7).to_json()
+    assert a == b
+    assert a != scenarios.get(name, span=128.0).compile(TOPO, seed=8).to_json()
+
+
+def test_hazard_model_sampling_deterministic():
+    cfg = HazardConfig(mttf_s=100.0, shape=3.0, age_spread_s=50.0,
+                       lemon_frac=0.2, lemon_factor=8.0)
+    draws = []
+    for _ in range(2):
+        rng = np.random.default_rng(42)
+        m = HazardModel(cfg, 16, rng)
+        draws.append([m.sample_next(d, 0.0, rng) for d in range(16)])
+    assert draws[0] == draws[1]
+
+
+def test_hazard_failures_concentrate_on_repeat_offenders():
+    """Renewal + wear: the same few devices fail again and again — the
+    per-device realism a global-rate Poisson cannot produce."""
+    tr = scenarios.get("aging_fleet", span=128.0).compile(TOPO, 0)
+    victims = [e.target for e in tr if e.kind.startswith("fail")]
+    top = max(victims.count(d) for d in set(victims))
+    assert top >= 4  # at least one device fails many times
+    assert len(set(victims)) < len(victims)  # recurrence, not distinct hits
+
+
+def test_hazard_respects_repair_ordering():
+    """A device never re-fails before its repair completed."""
+    tr = scenarios.get("aging_fleet", span=128.0).compile(TOPO, 3)
+    down_until = {}
+    for ev in tr:
+        if ev.kind.startswith("fail"):
+            assert ev.t >= down_until.get(ev.target, 0.0)
+        elif ev.kind == "rejoin":
+            down_until[ev.target] = ev.t
+
+
+# ================================================= ground-truth covariates
+def test_weibull_shape_controls_aging_direction():
+    rng = np.random.default_rng(0)
+    wear = HazardModel(HazardConfig(mttf_s=100.0, shape=3.0), 1, rng)
+    infant = HazardModel(HazardConfig(mttf_s=100.0, shape=0.6), 1, rng)
+    assert wear.rate(0, 200.0) > wear.rate(0, 50.0)  # k>1: old fails more
+    assert infant.rate(0, 200.0) < infant.rate(0, 50.0)  # k<1: burn-in
+
+
+def test_lemons_and_wear_raise_hazard():
+    cfg = HazardConfig(mttf_s=100.0, shape=1.0, lemon_frac=0.5,
+                       lemon_factor=10.0, wear_per_repair=2.0)
+    m = HazardModel(cfg, 64, np.random.default_rng(1))
+    assert 0 < int(m.lemons.sum()) < 64
+    lemon = int(np.argmax(m.lemons))
+    clean = int(np.argmin(m.lemons))
+    assert m.rate(lemon, 10.0) > m.rate(clean, 10.0)
+    before = m.rate(clean, 10.0)
+    m.record_repair(clean)
+    assert m.rate(clean, 10.0) == pytest.approx(2.0 * before)
+
+
+def test_expected_failures_monotone_in_horizon():
+    m = HazardModel(HazardConfig(mttf_s=300.0, shape=3.0, age_spread_s=100.0),
+                    32, np.random.default_rng(0))
+    assert 0.0 < expected_failures(m, 50.0) < expected_failures(m, 200.0)
+
+
+def test_hazard_config_validation():
+    with pytest.raises(ValueError):
+        HazardConfig(mttf_s=-1.0)
+    with pytest.raises(ValueError):
+        HazardConfig(lemon_frac=1.5)
+    with pytest.raises(ValueError):
+        HazardConfig(wear_per_repair=0.5)
+
+
+# ====================================================== hazard-off invariance
+def test_poisson_without_hazard_unchanged():
+    """The ``hazard`` field must not perturb the legacy global-rate stream:
+    a hazard-less PoissonFailures compiles to the identical timeline it did
+    before the field existed. The derived-RNG stream key is
+    ``crc32(repr(self))``, so the repr contract is the invariant: no
+    ``hazard`` mention when unset (pre-hazard byte-identity), appended when
+    set (distinct hazard configs draw distinct streams)."""
+    kw = dict(rate=0.5, t_end=100.0, mttr=10.0)
+    assert "hazard" not in repr(PoissonFailures(**kw))
+    assert repr(PoissonFailures(**kw)) == (
+        "PoissonFailures(rate=0.5, t_end=100.0, t_start=0.0, mix=0.5, "
+        "severity=(0.3, 0.6), mttr=10.0, max_events=64, renewal=False)")
+    assert "hazard=HazardConfig" in repr(
+        PoissonFailures(**kw, hazard=HazardConfig()))
+    tr = PoissonFailures(**kw).compile(TOPO, 9)
+    fails = [ev for ev in tr if ev.kind in ("fail-stop", "fail-slow")]
+    targets = [ev.target for ev in fails]
+    assert len(targets) == len(set(targets))  # distinct-device contract holds
+    assert {ev.target for ev in tr if ev.kind == "rejoin"} == set(targets)
+    assert tr.to_json() == PoissonFailures(**kw).compile(TOPO, 9).to_json()
+
+
+def test_hazard_switch_off_is_identical_policy():
+    """``ResiHPPolicy(hazard=None)`` (the default) must run byte-identical
+    to the pre-hazard code — same trace, same detector stats."""
+    streams = []
+    for kw in ({}, {}):
+        sim = TrainingSim("resihp", BENCH_CFG, policy_kwargs={**BASE_KW, **kw})
+        sim.apply_scenario(scenarios.get("flapping_stragglers", span=100.0))
+        sim.run(60, stop_on_abort=False)
+        streams.append(([(r.iteration, r.t_start, r.duration, r.throughput)
+                         for r in sim.trace], sim.detector.stats.as_dict()))
+    assert streams[0] == streams[1]
+    assert TrainingSim("resihp", BENCH_CFG).hazard_estimator is None
+
+
+# ============================================================= the estimator
+def _hist(mgr, device, stops=(), slows=()):
+    for t in stops:
+        mgr.record_failstop(device, t)
+    for t in slows:
+        mgr.record_failslow(device, 0.5, t)
+    return mgr.history(device)
+
+
+def test_estimator_baseline_risk_is_one():
+    est = HazardEstimator(HazardPolicyConfig())
+    assert est.risk(None, 100.0) == pytest.approx(1.0)
+    mgr = LifecycleManager()
+    h = _hist(mgr, 3, slows=[10.0])
+    # an in-window failure raises risk strictly above baseline ...
+    assert est.risk(h, 20.0) > 1.0
+    # ... and decays back to exactly 1.0 once it ages out of the window —
+    # never *below* baseline (the bug that made the planner prefer lemons
+    # in their quiet windows)
+    assert est.risk(h, 10.0 + est.cfg.window_s + 1.0) == pytest.approx(1.0)
+
+
+def test_estimator_counts_failslows_and_quarantines_repeaters():
+    cfg = HazardPolicyConfig()  # ratio 4 with prior 0.5 => 2 recent failures
+    est = HazardEstimator(cfg)
+    mgr = LifecycleManager()
+    h = _hist(mgr, 3, slows=[10.0, 30.0])
+    assert est.risk(h, 35.0) == pytest.approx(5.0)  # 1 + 2 per failure
+    assert est.should_quarantine(h, 35.0)
+    assert not est.should_quarantine(_hist(mgr, 4, slows=[10.0]), 35.0)
+
+
+def test_estimator_backoff_scales_and_caps():
+    est = HazardEstimator(HazardPolicyConfig())
+    mgr = LifecycleManager()
+    mild = _hist(mgr, 1, slows=[10.0, 20.0])
+    hot = _hist(mgr, 2, slows=[10.0, 12.0, 14.0, 16.0, 18.0, 20.0])
+    kw = dict(base_s=40.0, max_s=1200.0, level=1, factor=2.0)
+    assert est.backoff_s(mild, 25.0, **kw) >= 40.0
+    assert est.backoff_s(hot, 25.0, **kw) > est.backoff_s(mild, 25.0, **kw)
+    assert est.backoff_s(hot, 25.0, base_s=40.0, max_s=50.0, level=5,
+                         factor=2.0) == 50.0
+
+
+def test_hazard_keyed_quarantine_catches_failslow_repeater():
+    """The flap counter only counts fail-stops: a part that keeps coming
+    back *degraded* never quarantines under it, but does under the hazard
+    estimator — the exact blind spot the ISSUE names."""
+    est = HazardEstimator(HazardPolicyConfig())
+    blind = LifecycleManager(cfg=LifecycleConfig(), probe_fn=lambda d: 1.0)
+    aware = LifecycleManager(cfg=LifecycleConfig(), probe_fn=lambda d: 1.0,
+                             hazard=est)
+    for mgr in (blind, aware):
+        mgr.record_failslow(7, 0.4, 10.0)
+        mgr.record_failslow(7, 0.4, 25.0)
+    assert blind.on_rejoin(7, 30.0).admit  # flap counter saw 0 fail-stops
+    dec = aware.on_rejoin(7, 30.0)
+    assert not dec.admit and dec.state == QUARANTINED
+    assert aware.quarantined(31.0) == frozenset({7})
+    assert aware.risk_scores(31.0)[7] > 1.0
+
+
+# ======================================================= risk-aware planning
+def test_tp_reconfig_risk_tiebreak():
+    speeds = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0, 4: 1.0}
+    # no risk: legacy ordering (stable sort keeps pool order on ties)
+    rec = reconfigure_tp_group([0, 1, 2, 3, 4], speeds)
+    assert rec.devices == (0, 1, 2, 3)
+    # device 1 is a known repeater: equal-speed tie breaks away from it
+    risky = reconfigure_tp_group([0, 1, 2, 3, 4], speeds,
+                                 risk={1: 5.0})
+    assert 1 not in risky.devices and risky.tp == 4
+    assert risky.standby == (1,)
+    # Eq. 4 still decides throughput: a fast high-risk device beats a slow
+    # low-risk one (risk is a tie-break, not a veto)
+    rec2 = reconfigure_tp_group([0, 1], {0: 1.0, 1: 0.2}, risk={0: 9.0})
+    assert rec2.devices == (0,)
+
+
+def test_scheduler_adapt_risk_prefers_low_hazard_standby():
+    plan = initial_plan(8, dp=1, pp=2, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 8)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[1] = 0.0  # failure in stage 0 forces a group reconfig
+    blind = sch.adapt(plan, speeds)
+    aware = sch.adapt(plan, speeds, device_risk={2: 6.0})
+    # both exclude the dead device and keep a tp2 subgroup ...
+    assert blind.plan.replicas[0].stages[0].tp == 2
+    assert aware.plan.replicas[0].stages[0].tp == 2
+    # ... but the risk-aware one benches the known repeater on the tie
+    assert 2 in blind.plan.replicas[0].stages[0].devices
+    assert 2 not in aware.plan.replicas[0].stages[0].devices
+    assert any("risk-aware" in n for n in aware.notes)
+    # risk=None keeps byte-identical plans (hazard-blind contract)
+    again = sch.adapt(plan, speeds)
+    assert again.plan == blind.plan
+
+
+def test_risk_is_exposure_free():
+    """The decision score depends only on the recent failure count — the
+    exposure terms cancel by construction, so the same history scores the
+    same no matter when in the session it is evaluated."""
+    mgr = LifecycleManager()
+    h = _hist(mgr, 9, slows=[100.0, 110.0])
+    for pt in (1.0, 400.0, 1e9):
+        est = HazardEstimator(HazardPolicyConfig(prior_time_s=pt))
+        assert est.risk(h, 115.0) == pytest.approx(5.0)
+        assert est.risk(h, 140.0) == pytest.approx(5.0)
+
+
+# ======================================================== plan-overhead model
+def test_plan_overhead_model_fit_and_predict():
+    true = PlanOverheadModel(coef=1.4, intercept=-17.0)
+    samples = [(d, l, true.predict(d, l)) for d, l in
+               ((16, 28), (32, 48), (64, 64), (128, 80))]
+    fit = PlanOverheadModel.fit(samples)
+    assert fit.coef == pytest.approx(1.4, rel=1e-6)
+    assert fit.fit_mape < 1e-6
+    assert fit.predict(64, 64) == pytest.approx(true.predict(64, 64), rel=1e-6)
+    with pytest.raises(ValueError):
+        PlanOverheadModel.fit([(16, 28, 1e-4)])
+
+
+def test_plan_overhead_model_is_deterministic_in_sim():
+    """``plan_overhead_model`` replaces the measured wall-clock charge with
+    the fitted curve: two runs produce identical reconfig charges (the
+    measured path does not — that is the ROADMAP item this closes)."""
+    charges = []
+    for _ in range(2):
+        sim = TrainingSim("resihp", BENCH_CFG,
+                          policy_kwargs={"plan_overhead_model": True})
+        sim.apply_scenario(scenarios.get("fig10_mixed", span=30.0))
+        sim.run(50, stop_on_abort=False)
+        charges.append([e[1] for r in sim.trace for e in r.events
+                        if e[0] == "reconfig"])
+    assert charges[0] == charges[1] and charges[0]
+    model = PlanOverheadModel()
+    predicted = model.predict(BENCH_CFG.n_devices, BENCH_CFG.n_layers)
+    # every reconfig charge embeds the modeled (not measured) planning term
+    assert all(c >= predicted for c in charges[0])
+
+
+# ================================================ validation as fail-stop
+def test_validation_doubles_as_failstop_path():
+    """A device that died just before a validation pass is reported by the
+    pass itself (lifecycle on): belief flips immediately and the heartbeat
+    never re-reports (no second stall). Lifecycle off: the same death waits
+    out the heartbeat window — the ROADMAP gap this closes."""
+    scen = (FailSlow(device=21, severity=0.35, at=10.0)
+            + FailStop(at=14.0, device=3))
+    lc = TrainingSim("resihp", BENCH_CFG,
+                     policy_kwargs={**BASE_KW, "lifecycle": True})
+    lc.apply_scenario(scen)
+    lc.run(40, stop_on_abort=False)
+    ev = [(r.iteration, e) for r in lc.trace for e in r.events]
+    via_val = [it for it, e in ev if e[0] == "failstop-via-validation"]
+    assert via_val, "validation pass did not report the dead device"
+    assert not any(e[0] == "fail-stop-detected" and 3 in e[1] for _, e in ev)
+    assert lc.known_speeds[3] == 0.0
+    assert lc.lifecycle.histories[3].fail_stops  # recorded as a fail-stop
+
+    # lifecycle off (the paper's behaviour): the same death is only ever
+    # detected by the heartbeat timeout — validation never reports it, and
+    # the NCCL-stall charge is paid
+    base = TrainingSim("resihp", BENCH_CFG, policy_kwargs=BASE_KW)
+    base.apply_scenario(scen)
+    base.run(40, stop_on_abort=False)
+    bev = [e for r in base.trace for e in r.events]
+    assert not any(e[0] == "failstop-via-validation" for e in bev)
+    assert any(e[0] == "fail-stop-detected" and 3 in e[1] for e in bev)
+
+
+# ================================================== engine parity (heartbeat)
+PARITY_CFG = SimConfig(dp=2, pp=4, tp=2, n_layers=16, n_microbatches=4,
+                       seq_len=2048, noise=0.01, seed=0)  # 16 devices, 2 nodes
+
+
+@pytest.mark.parametrize("scenario,kw", [
+    ("aging_fleet", dict(span=60.0)),
+    ("lemon_devices", dict(span=60.0)),
+    ("rack_storm", dict(at=8.0, recover_after=25.0)),
+])
+def test_hazard_engine_parity(scenario, kw):
+    """python (reference HeartbeatMonitor, per-device loops) vs fast
+    (FastHeartbeat + StageSpeedCache) with the hazard subsystem on — the
+    parity pin for the vectorized ``_sync_beliefs`` path, including node
+    death/recovery and hazard rejoin storms."""
+    streams = []
+    for engine in ("python", "fast"):
+        sim = TrainingSim("resihp", PARITY_CFG, engine=engine,
+                          policy_kwargs={**BASE_KW, "hazard": True})
+        sim.apply_scenario(scenarios.get(scenario, **kw))
+        sim.run(60, stop_on_abort=False)
+        streams.append(([(r.iteration, r.t_start, r.duration, r.throughput)
+                         for r in sim.trace],
+                        [ev.as_tuple() for ev in sim.event_log],
+                        sim.detector.stats.as_dict(),
+                        sim.lifecycle.stats.as_dict(),
+                        dict(sim.known_speeds)))
+    assert streams[0] == streams[1]
+
+
+def test_fast_heartbeat_unit_parity():
+    """Scripted beat/death/revive sequence through both monitors: identical
+    newly-failed reports at every sweep (device-level, whole-node and
+    revive-after-node-death paths)."""
+    from repro.cluster.fastsim import FastHeartbeat
+    from repro.core.detector.heartbeat import HeartbeatMonitor
+
+    def build(cls):
+        hb = cls(interval=1.0, miss_threshold=3)
+        for n in range(2):
+            hb.register_node(n, [n * 4 + i for i in range(4)])
+        return hb
+
+    ref, fast = build(HeartbeatMonitor), build(FastHeartbeat)
+    alive = {d: True for d in range(8)}
+
+    def beat(now):
+        for d, up in alive.items():
+            if up:
+                ref.device_beat(d // 4, d, now)
+                ref.node_beat(d // 4, now)
+        fast.beat_all(np.array([alive[d] for d in range(8)]), now)
+
+    log = []
+    for t in range(20):
+        now = float(t)
+        if t == 3:
+            alive[2] = False  # single device dies
+        if t == 9:
+            for d in (4, 5, 6, 7):
+                alive[d] = False  # whole node goes dark
+        if t == 15:
+            alive[2] = True  # repaired: revive through both monitors
+            ref.revive(2, now)
+            fast.revive(2, now)
+        if t == 17:
+            alive[4] = True  # node-resident device returns (revives node)
+            ref.revive(4, now)
+            fast.revive(4, now)
+        beat(now)
+        a, b = ref.sweep(now), fast.sweep(now)
+        assert a == b, (t, a, b)
+        log.append(a)
+    assert any(log)  # the sequence actually exercised failures
+    assert ref.failed_devices == fast.failed_devices
+    assert ref.failed_nodes == fast.failed_nodes
+    # second deaths after revive are detectable in both
+    alive[2] = False
+    for t in range(20, 26):
+        beat(float(t))
+        a, b = ref.sweep(float(t)), fast.sweep(float(t))
+        assert a == b
+    assert 2 in ref.failed_devices and 2 in fast.failed_devices
+
+
+# ==================================================== the acceptance bench row
+def test_bench_aging_fleet_risk_aware_beats_hazard_blind():
+    """ISSUE acceptance: with ``aging_fleet`` on, the risk-aware planner
+    (``resihp+hz``) beats the hazard-blind one (``resihp+lc``) on throughput
+    — execution *and* session (reconfiguration storms included) — in the
+    exact configuration ``bench_scenarios`` runs."""
+    from benchmarks.bench_scenarios import run as bench_run
+
+    hz = bench_run("llama2-13b", "aging_fleet", "resihp+hz", iters=160)
+    lc = bench_run("llama2-13b", "aging_fleet", "resihp+lc", iters=160)
+    assert not hz["aborted"] and not lc["aborted"]
+    assert hz["throughput"] > lc["throughput"]
+    assert hz["session_throughput"] > lc["session_throughput"]
+    assert hz["lifecycle"]["quarantines"] >= 1  # the mechanism engaged
+    assert lc["lifecycle"]["quarantines"] == 0  # the blind spot is real

@@ -1,0 +1,84 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo docs (no dependencies).
+
+Walks the given files/directories, extracts every markdown link and image
+(``[text](target)``), and verifies that each *relative* target resolves to an
+existing file — including ``#anchor`` links, whose heading must exist in the
+target (or current) file. External ``http(s)://`` and ``mailto:`` targets are
+not fetched (CI must not depend on the network); they are only checked for
+obvious malformation.
+
+    python tools/check_md_links.py README.md docs
+
+Exit code 1 with a per-link report when anything dangles — wired into the
+nightly workflow so a renamed doc or module breaks the night's build, not a
+future reader.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[([^\]]*)\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dashes."""
+    text = re.sub(r"[`*_~]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def md_files(args) -> list:
+    out = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            out.append(p)
+        else:
+            raise SystemExit(f"not a markdown file or directory: {a}")
+    return out
+
+
+def check(files) -> list:
+    errors = []
+    for md in files:
+        text = md.read_text()
+        for m in LINK_RE.finditer(text):
+            target = m.group(2)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                if slugify(target[1:]) not in anchors_of(md):
+                    errors.append(f"{md}: dangling anchor {target!r}")
+                continue
+            rel, _, frag = target.partition("#")
+            dest = (md.parent / rel).resolve()
+            if not dest.exists():
+                errors.append(f"{md}: dangling link {target!r} -> {dest}")
+            elif frag and dest.suffix == ".md" \
+                    and slugify(frag) not in anchors_of(dest):
+                errors.append(f"{md}: dangling anchor {target!r} in {dest.name}")
+    return errors
+
+
+def main(argv) -> int:
+    files = md_files(argv or ["README.md", "docs"])
+    errors = check(files)
+    for e in errors:
+        print(f"BROKEN  {e}")
+    print(f"checked {len(files)} file(s): "
+          f"{'%d broken link(s)' % len(errors) if errors else 'all links ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

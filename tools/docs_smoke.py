@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Smoke-run the benchmark commands quoted in a docs page (no dependencies).
+
+Extracts every ``PYTHONPATH=src python -m benchmarks.…`` (and
+``python tools/…``) command from the page — fenced code blocks and
+backtick-quoted table cells alike — appends ``--quick`` where the command
+does not already carry it, and executes each from the repo root. Any
+non-zero exit fails the run, so a renamed module, flag or scenario breaks
+the nightly build instead of silently rotting the docs.
+
+    python tools/docs_smoke.py docs/benchmarks.md [--list] [--timeout 1200]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import shlex
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# a command starts at `PYTHONPATH=src python -m benchmarks.` or
+# `python tools/` and runs until a backtick, table pipe, bracket or end of
+# line — matches both `code spans` and fenced blocks
+CMD_RE = re.compile(
+    r"(?:PYTHONPATH=src )?python (?:-m benchmarks\.|tools/)[^`|\]\n]+")
+QUICKLESS = ("tools/",)  # scripts that have no --quick flag
+SELF = "tools/docs_smoke.py"  # validated with --list to avoid recursion
+
+
+def extract(page: Path) -> list:
+    cmds = []
+    for m in CMD_RE.finditer(page.read_text()):
+        cmd = m.group(0).strip().rstrip("\\").strip()
+        if any(ch in cmd for ch in "…<>"):
+            continue  # prose placeholder, not a runnable command
+        # strip placeholder option syntax from usage lines: `[--quick] ...`
+        cmd = re.sub(r"\s*\[[^\]]*\]", "", cmd).strip()
+        if SELF in cmd:
+            # the page quotes this very tool: running it for real would
+            # recurse through the whole command list again — validate the
+            # CLI with --list instead
+            cmd = f"python {SELF} --list"
+        elif "--quick" not in cmd and not any(q in cmd for q in QUICKLESS):
+            cmd += " --quick"
+        if cmd not in cmds:
+            cmds.append(cmd)
+    return cmds
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("page", nargs="?", default="docs/benchmarks.md")
+    ap.add_argument("--list", action="store_true",
+                    help="print the extracted commands and exit")
+    ap.add_argument("--timeout", type=int, default=1200,
+                    help="per-command timeout in seconds")
+    args = ap.parse_args(argv)
+
+    page = (REPO_ROOT / args.page).resolve()
+    cmds = extract(page)
+    if not cmds:
+        print(f"no benchmark commands found in {page}")
+        return 1
+    if args.list:
+        for c in cmds:
+            print(c)
+        return 0
+
+    env = dict(os.environ)
+    failures = []
+    for cmd in cmds:
+        words = shlex.split(cmd)
+        if words[0].startswith("PYTHONPATH="):
+            env["PYTHONPATH"] = words[0].split("=", 1)[1] + (
+                os.pathsep + os.environ["PYTHONPATH"]
+                if os.environ.get("PYTHONPATH") else "")
+            words = words[1:]
+        assert words[0] == "python", cmd
+        argv_cmd = [sys.executable] + words[1:]  # replace bare `python`
+        print(f"\n== {cmd}", flush=True)
+        t0 = time.time()
+        try:
+            r = subprocess.run(argv_cmd, cwd=REPO_ROOT, env=env,
+                               timeout=args.timeout)
+            ok = r.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok = False
+        print(f"== {'ok' if ok else 'FAILED'} in {time.time() - t0:.0f}s",
+              flush=True)
+        if not ok:
+            failures.append(cmd)
+    print(f"\n{len(cmds) - len(failures)}/{len(cmds)} documented "
+          f"command(s) ran clean")
+    for f in failures:
+        print(f"FAILED  {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
