@@ -50,18 +50,25 @@ SWEEP = {
 
 # policy label -> (policy name, policy kwargs); the lifecycle/hazard runs are
 # the only place the default-off ResiHPPolicy(lifecycle=/hazard=) switches
-# are on
+# are on. The resihp rows pin the planning charge to the deterministic
+# PlanOverheadModel (instead of measured wall clock) so every sweep cell is
+# a pure function of its (model, scenario, policy, seed) coordinates — the
+# property the parallel orchestrator's byte-identical merge contract
+# (benchmarks/sweep.py) rests on.
 POLICIES = {
-    "resihp": ("resihp", {}),
-    "resihp+lc": ("resihp", {"lifecycle": True}),
-    "resihp+hz": ("resihp", {"hazard": True}),
+    "resihp": ("resihp", {"plan_overhead_model": True}),
+    "resihp+lc": ("resihp", {"lifecycle": True, "plan_overhead_model": True}),
+    "resihp+hz": ("resihp", {"hazard": True, "plan_overhead_model": True}),
     "recycle+": ("recycle+", {}),
     "oobleck+": ("oobleck+", {}),
 }
 
 
 def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
-        engine="fast", scale=None):
+        engine="fast", scale=None, full=False):
+    """One sweep cell. ``full=True`` keeps the per-cell event timeline in the
+    result (16k+ lines of JSON across the grid — debugging/replay payload);
+    the default keeps only the summary rows the tests and docs consume."""
     cfg = sim_config(model, seed=seed, scale=scale)
     name, policy_kwargs = POLICIES[policy]
     sim = TrainingSim(name, cfg, engine=engine, policy_kwargs=policy_kwargs)
@@ -74,12 +81,47 @@ def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
         "session_throughput": sim.session_throughput(skip=2),
         "aborted": sim.aborted,
         "n_events": len(trace),
-        "events": trace.as_tuples(),
         "detector": st.as_dict(),
     }
+    if full:
+        out["events"] = trace.as_tuples()
     if sim.lifecycle is not None:
         out["lifecycle"] = sim.lifecycle.stats.as_dict()
     return out
+
+
+def derive_rows(key_prefix: str, rs: dict) -> list:
+    """CSV rows for one scenario cell's policy->result dict (shared with the
+    parallel orchestrator so both emit identical summaries)."""
+    rows = []
+    resi = rs.get("resihp", {}).get("throughput", 0.0)
+    for p, r in rs.items():
+        t = r["throughput"]
+        det = r["detector"]
+        sess = f"sess={r['session_throughput']:.2f}"
+        if p == "resihp+lc":
+            lc = r.get("lifecycle", {})
+            derived = (f"vals={det['validations']}"
+                       f" fa={det['false_alarms']}"
+                       f" quar={lc.get('quarantines', 0)}"
+                       f" probes={lc.get('probes', 0)} {sess}")
+        elif p == "resihp+hz":
+            lc = r.get("lifecycle", {})
+            blind = rs.get("resihp+lc", {}).get("session_throughput", 0.0)
+            derived = (f"quar={lc.get('quarantines', 0)}"
+                       f" deferred={lc.get('rejoins_deferred', 0)}"
+                       f" {sess}"
+                       f" vs_blind={r['session_throughput'] / max(blind, 1e-9):.2f}x")
+        elif p == "resihp":
+            derived = (f"n_events={r['n_events']}"
+                       f" vals={det['validations']}"
+                       f" fa={det['false_alarms']} {sess}")
+        else:
+            derived = f"resihp_speedup={resi / max(t, 1e-9):.2f}x"
+        rows.append((f"{key_prefix}/{p}",
+                     "-" if r["aborted"] else round(t, 2),
+                     derived))
+    return rows
 
 
 # the hazard families model slow per-device renewal dynamics (lemon repair/
@@ -89,44 +131,18 @@ def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
 HAZARD_SCENARIOS = ("aging_fleet", "lemon_devices", "infant_mortality")
 
 
-def main(quick=False, engine="fast"):
+def main(quick=False, engine="fast", full=False):
     models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
     iters = 80 if quick else 160
     out, rows = {}, []
     for model in models:
         for sc in SWEEP:
             sc_iters = 160 if sc in HAZARD_SCENARIOS else iters
-            rs = {p: run(model, sc, p, iters=sc_iters, engine=engine)
+            rs = {p: run(model, sc, p, iters=sc_iters, engine=engine,
+                         full=full)
                   for p in POLICIES}
             out[f"{model}/{sc}"] = rs
-            resi = rs["resihp"]["throughput"]
-            for p, r in rs.items():
-                t = r["throughput"]
-                det = r["detector"]
-                sess = f"sess={r['session_throughput']:.2f}"
-                if p == "resihp+lc":
-                    lc = r.get("lifecycle", {})
-                    derived = (f"vals={det['validations']}"
-                               f" fa={det['false_alarms']}"
-                               f" quar={lc.get('quarantines', 0)}"
-                               f" probes={lc.get('probes', 0)} {sess}")
-                elif p == "resihp+hz":
-                    lc = r.get("lifecycle", {})
-                    blind = rs["resihp+lc"]["session_throughput"]
-                    derived = (f"quar={lc.get('quarantines', 0)}"
-                               f" deferred={lc.get('rejoins_deferred', 0)}"
-                               f" {sess}"
-                               f" vs_blind={r['session_throughput'] / max(blind, 1e-9):.2f}x")
-                elif p == "resihp":
-                    derived = (f"n_events={r['n_events']}"
-                               f" vals={det['validations']}"
-                               f" fa={det['false_alarms']} {sess}")
-                else:
-                    derived = f"resihp_speedup={resi / max(t, 1e-9):.2f}x"
-                rows.append((
-                    f"scenarios/{model}/{sc}/{p}",
-                    "-" if r["aborted"] else round(t, 2),
-                    derived))
+            rows += derive_rows(f"scenarios/{model}/{sc}", rs)
     write_result("scenarios_sweep", out)
     return rows
 
@@ -139,5 +155,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--engine", choices=("python", "fast"), default="fast")
+    ap.add_argument("--full", action="store_true",
+                    help="keep per-cell event timelines in the JSON "
+                         "(large); default keeps summary rows only")
     args = ap.parse_args()
-    emit(main(quick=args.quick, engine=args.engine))
+    emit(main(quick=args.quick, engine=args.engine, full=args.full))

@@ -4,12 +4,23 @@ engine on the Fig. 14 protocol.
 Measures wall-clock for the 256-device Fig. 14 config under both engines,
 asserts they produce identical results (throughput parity is a live canary
 on top of the golden/parity test suites), and adds fast-engine-only points
-at 1024/2048 devices — the sweep sizes the ROADMAP "Scale" item asks for.
+at 1024/2048/8192/16384 devices — the fleet scales the ROADMAP "Scale" item
+asks for. Per-row ``wall_ms_per_device`` plus the headline
+``per_device_scaling_16384_vs_2048`` ratio make superlinear growth visible
+at a glance (the array-native cluster core targets ratio <= ~1.5, i.e.
+near-linear).
 
 Writes ``results/bench_simcore.json`` and the repo-root
 ``BENCH_simcore.json`` cited by the README.
 
-    PYTHONPATH=src python -m benchmarks.bench_simcore [--quick]
+    PYTHONPATH=src python -m benchmarks.bench_simcore [--quick] [--check]
+
+``--check`` is the nightly perf-regression gate: measured wall times are
+compared against the checked-in reference values
+(``benchmarks/simcore_reference.json``) with a generous 2x tolerance —
+loose enough to absorb runner-speed variance, tight enough that a
+superlinear regression (which costs 4-8x on the large-device rows) fails
+loudly.
 """
 from __future__ import annotations
 
@@ -20,13 +31,56 @@ from benchmarks.bench_fig14_largescale import run
 from benchmarks.common import RESULTS, write_result
 
 REPO_ROOT_JSON = RESULTS.parent / "BENCH_simcore.json"
+REFERENCE_JSON = Path(__file__).resolve().parent / "simcore_reference.json"
+
+QUICK_POINTS = [("python", 256), ("fast", 256), ("fast", 1024),
+                ("fast", 4096)]
+FULL_POINTS = [("python", 256), ("fast", 256), ("fast", 1024),
+               ("fast", 2048), ("fast", 8192), ("fast", 16384)]
 
 
-def main(quick=False):
+def check_against_reference(results: dict, iters: int, *,
+                            tolerance: float = 2.0) -> list:
+    """Compare this run against the checked-in reference; return a list of
+    human-readable violations (empty = pass). Two layers:
+
+    * absolute wall times at ``tolerance`` (generous, absorbs moderate
+      runner-speed differences);
+    * the **scaling ratio** between the largest and smallest fast-engine
+      points — runner speed cancels out of a same-run ratio, so this stays
+      meaningful even on hosts much faster or slower than the reference
+      machine (where the absolute check loses its teeth or cries wolf)."""
+    ref = json.loads(REFERENCE_JSON.read_text())
+    if ref["iters"] != iters:
+        return [f"reference measured at iters={ref['iters']}, got {iters} "
+                f"(run with the matching --quick mode)"]
+    violations = []
+    for key, ref_wall in ref["wall_s"].items():
+        got = results.get(key)
+        if got is None:
+            violations.append(f"{key}: missing from this run")
+            continue
+        if got["wall_s"] > tolerance * ref_wall:
+            violations.append(
+                f"{key}: wall_s {got['wall_s']:.2f} > {tolerance:g}x "
+                f"reference {ref_wall:.2f} — superlinear regression?")
+    fast = sorted((k for k in ref["wall_s"] if k.startswith("fast@")),
+                  key=lambda k: int(k.split("@")[1]))
+    if len(fast) >= 2 and all(k in results for k in (fast[0], fast[-1])):
+        lo, hi = fast[0], fast[-1]
+        got_ratio = results[hi]["wall_s"] / max(results[lo]["wall_s"], 1e-9)
+        ref_ratio = ref["wall_s"][hi] / max(ref["wall_s"][lo], 1e-9)
+        if got_ratio > tolerance * ref_ratio:
+            violations.append(
+                f"{hi}/{lo} wall ratio {got_ratio:.1f} > {tolerance:g}x "
+                f"reference ratio {ref_ratio:.1f} — per-device scaling "
+                f"regressed (machine-speed-independent check)")
+    return violations
+
+
+def main(quick=False, check=False):
     iters = 40 if quick else 160
-    points = [("python", 256), ("fast", 256), ("fast", 1024)]
-    if not quick:
-        points.append(("fast", 2048))
+    points = QUICK_POINTS if quick else FULL_POINTS
     results = {}
     for engine, devices in points:
         r = run("resihp", iters=iters, engine=engine, devices=devices)
@@ -35,6 +89,7 @@ def main(quick=False):
             "devices": devices,
             "iters": iters,
             "wall_s": r["wall_s"],
+            "wall_ms_per_device": round(1000.0 * r["wall_s"] / devices, 4),
             "avg_throughput": r["avg_throughput"],
             "aborted": r["aborted"],
         }
@@ -53,6 +108,10 @@ def main(quick=False):
         "fast_1024_faster_than_python_256": (
             results["fast@1024"]["wall_s"] < py["wall_s"]),
     }
+    if "fast@16384" in results and "fast@2048" in results:
+        payload["per_device_scaling_16384_vs_2048"] = round(
+            results["fast@16384"]["wall_ms_per_device"]
+            / max(results["fast@2048"]["wall_ms_per_device"], 1e-9), 3)
     write_result("bench_simcore", payload)
     if not quick:
         # the repo-root file is the checked-in 160-iteration measurement the
@@ -60,8 +119,21 @@ def main(quick=False):
         REPO_ROOT_JSON.write_text(json.dumps(payload, indent=2) + "\n")
 
     rows = [(f"simcore/{k}/wall_s", v["wall_s"],
-             f"thpt={v['avg_throughput']:.2f}") for k, v in results.items()]
+             f"thpt={v['avg_throughput']:.2f} "
+             f"per_dev_ms={v['wall_ms_per_device']}")
+            for k, v in results.items()]
     rows.append(("simcore/speedup_fast_vs_python@256", round(speedup, 1), ""))
+    if "per_device_scaling_16384_vs_2048" in payload:
+        rows.append(("simcore/per_device_scaling_16384_vs_2048",
+                     payload["per_device_scaling_16384_vs_2048"],
+                     "target <= ~1.5 (near-linear)"))
+    if check:
+        violations = check_against_reference(results, iters)
+        for v in violations:
+            rows.append(("simcore/REGRESSION", "-", v))
+        if violations:
+            raise SystemExit(
+                "bench_simcore --check failed:\n  " + "\n  ".join(violations))
     return rows
 
 
@@ -72,5 +144,8 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) if wall times exceed 2x the "
+                         "checked-in reference (nightly perf gate)")
     args = ap.parse_args()
-    emit(main(quick=args.quick))
+    emit(main(quick=args.quick, check=args.check))

@@ -16,9 +16,10 @@ from repro.cluster.simulator import SimConfig
 RESULTS = Path(__file__).resolve().parent.parent / "results"
 
 # paper Table 3: scale -> (TP, DP, PP); layer counts per model family.
-# The 1k/2k/4k rows extend the paper's 256-GPU Fig. 14 point to the
-# fleet scales the related literature reports (ByteDance, SPARe); they are
-# reachable in reasonable wall-clock only with the fast simulator engine.
+# The 1k/2k/4k/8k/16k rows extend the paper's 256-GPU Fig. 14 point to the
+# fleet scales the related literature reports (ByteDance, SPARe, Meta's
+# 100k+-GPU HSDP runs); they are reachable in reasonable wall-clock only
+# with the fast simulator engine + array-native cluster core.
 TABLE3 = {
     "small": (4, 2, 2),
     "medium": (4, 2, 4),
@@ -27,6 +28,8 @@ TABLE3 = {
     "1k": (4, 8, 32),     # 1024 devices
     "2k": (4, 16, 32),    # 2048 devices
     "4k": (8, 16, 32),    # 4096 devices
+    "8k": (8, 32, 32),    # 8192 devices
+    "16k": (8, 64, 32),   # 16384 devices
 }
 MODELS = {
     "llama2-7b": ("small", 32),

@@ -31,13 +31,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated bench keys")
+    ap.add_argument("--skip", default=None,
+                    help="comma-separated bench keys to leave out (e.g. "
+                         "when a dedicated CI step runs them separately)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    skip = set(args.skip.split(",")) if args.skip else set()
 
     print("name,value,derived")
     failures = []
     for key, module in BENCHES:
-        if only and key not in only:
+        if (only and key not in only) or key in skip:
             continue
         t0 = time.time()
         try:

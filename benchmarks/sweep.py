@@ -1,0 +1,134 @@
+"""Parallel scenario-sweep orchestrator: fan the scenario x policy x seed
+grid across worker processes.
+
+``bench_scenarios`` runs its grid strictly serially — fine for one model at
+80 iterations, a wall-clock throttle for the ROADMAP's "as many scenarios as
+you can imagine" goal. Every sweep cell is embarrassingly parallel and, with
+the resihp rows pinned to the deterministic :class:`PlanOverheadModel`
+planning charge, a pure function of its coordinates — so the orchestrator
+can schedule cells on any worker in any order and still merge the exact
+bytes the serial path produces:
+
+* **deterministic per-cell seeding** — each cell builds its own ``SimConfig``
+  from the cell's ``seed`` coordinate; no RNG state is shared between cells,
+  so worker assignment and completion order cannot leak into results;
+* **byte-identical merge** — results are keyed by cell coordinates and
+  assembled in canonical grid order (models, then scenarios, then seeds,
+  then policies) regardless of which worker finished first;
+  ``--workers 1`` / ``--serial`` is the in-process reference path, and
+  ``tests/test_sweep.py`` pins parallel == serial byte-for-byte and
+  worker-count invariance.
+
+Usage:
+
+    PYTHONPATH=src python -m benchmarks.sweep [--workers N] [--serial]
+        [--quick] [--full] [--seeds K] [--engine fast|python]
+
+Writes ``results/scenarios_sweep.json`` (the same artifact the serial bench
+produces; with ``--seeds K`` > 1, cells are keyed ``model/scenario/sK``).
+"""
+from __future__ import annotations
+
+import os
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+
+from benchmarks import bench_scenarios
+from benchmarks.common import write_result
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One grid cell — the complete, self-contained recipe for one run."""
+
+    model: str
+    scenario: str
+    policy: str
+    seed: int
+    iters: int
+
+
+def build_grid(*, models, scenarios=None, policies=None, seeds=(0,),
+               iters=160, hazard_iters=160) -> list:
+    """Canonical cell order: models > scenarios > seeds > policies (the
+    serial bench's iteration order, extended by the seed axis)."""
+    scenarios = list(scenarios or bench_scenarios.SWEEP)
+    policies = list(policies or bench_scenarios.POLICIES)
+    cells = []
+    for model in models:
+        for sc in scenarios:
+            sc_iters = (hazard_iters if sc in bench_scenarios.HAZARD_SCENARIOS
+                        else iters)
+            for seed in seeds:
+                for p in policies:
+                    cells.append(Cell(model, sc, p, seed, sc_iters))
+    return cells
+
+
+def run_cell(cell: Cell, engine: str = "fast", full: bool = False) -> dict:
+    return bench_scenarios.run(cell.model, cell.scenario, cell.policy,
+                               iters=cell.iters, seed=cell.seed,
+                               engine=engine, full=full)
+
+
+def _cell_key(cell: Cell, multi_seed: bool) -> str:
+    base = f"{cell.model}/{cell.scenario}"
+    return f"{base}/s{cell.seed}" if multi_seed else base
+
+
+def sweep(cells, *, workers: int = 0, engine: str = "fast",
+          full: bool = False) -> dict:
+    """Run every cell and merge into the serial path's nested dict layout.
+    ``workers <= 1`` runs in-process (the reference serial path); otherwise a
+    process pool executes cells concurrently and the merge reassembles them
+    in canonical grid order, byte-identical to serial."""
+    if workers <= 1:
+        results = {cell: run_cell(cell, engine, full) for cell in cells}
+    else:
+        with ProcessPoolExecutor(max_workers=workers) as ex:
+            futures = {cell: ex.submit(run_cell, cell, engine, full)
+                       for cell in cells}
+        results = {cell: fut.result() for cell, fut in futures.items()}
+    multi_seed = len({c.seed for c in cells}) > 1
+    out: dict = {}
+    for cell in cells:
+        out.setdefault(_cell_key(cell, multi_seed), {})[cell.policy] = \
+            results[cell]
+    return out
+
+
+def main(quick=False, engine="fast", full=False, workers=0, seeds=1):
+    models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
+    iters = 80 if quick else 160
+    # the hazard families keep the full 160-iteration session even in
+    # --quick mode, exactly like the serial bench (slow renewal dynamics)
+    cells = build_grid(models=models, seeds=range(seeds), iters=iters)
+    if workers <= 0:
+        workers = min(len(cells), os.cpu_count() or 1)
+    out = sweep(cells, workers=workers, engine=engine, full=full)
+    write_result("scenarios_sweep", out)
+    rows = []
+    for key, rs in out.items():
+        rows += bench_scenarios.derive_rows(f"scenarios/{key}", rs)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--engine", choices=("python", "fast"), default="fast")
+    ap.add_argument("--full", action="store_true",
+                    help="keep per-cell event timelines in the JSON")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="worker processes (0 = one per core; 1 = serial)")
+    ap.add_argument("--serial", action="store_true",
+                    help="force the in-process serial reference path")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="seeds per cell (adds a /sK key level when > 1)")
+    args = ap.parse_args()
+    emit(main(quick=args.quick, engine=args.engine, full=args.full,
+              workers=1 if args.serial else args.workers, seeds=args.seeds))

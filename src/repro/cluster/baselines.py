@@ -348,6 +348,11 @@ class ResiHPPolicy(BasePolicy):
                 delta=self.delta,
                 enable_selective=self.enable_selective,
                 enable_repartition=self.enable_repartition,
+                # with a fixed or modeled planning charge the measured wall
+                # clock is never read — keep the hot loop syscall-free so
+                # plan-cache hits are truly free
+                measure_overhead=(self.plan_overhead_fixed is None
+                                  and self.plan_overhead_model is None),
             )
 
     def decide(self, speeds, *, changed: bool,

@@ -203,14 +203,31 @@ class FastMigrator:
         self.running = [None] * E
         self.migrations: list = []
         self._rr = 0
-        # Algorithm-1 progress state: P[d][i], per-stage min/max and hot set
-        self._P = [[0] * n_stages for _ in range(n_replicas)]
+        # Algorithm-1 progress state: P[d, i] as a dense int matrix so the
+        # decide body reduces whole replica-columns in C (the per-stage
+        # min/max python loops were the one O(R) term left per event batch —
+        # superlinear once fleet growth rides on DP), plus per-stage min/max
+        # and the hot set
+        self._P = np.zeros((n_replicas, n_stages), dtype=np.int64)
         self._minval = [0] * n_stages
         self._n_at_min = [n_replicas] * n_stages
         self._maxval = [0] * n_stages
         self._hot: set = set()
         self._max_finish = None
         self._pr_finish = [0.0] * n_replicas
+        # static per-stage liveness (self.dead never changes during a run):
+        # alive replica list (reference iteration order) and dead-row index
+        # arrays for the masked argmax
+        self._alive_rows = [
+            [d for d in range(n_replicas) if (d, s) not in self.dead]
+            for s in range(n_stages)
+        ]
+        self._dead_rows = [
+            np.array([d for d in range(n_replicas) if (d, s) in self.dead],
+                     dtype=np.intp)
+            if any((d, s) in self.dead for d in range(n_replicas)) else None
+            for s in range(n_stages)
+        ]
 
     # ------------------------------------------------------------- helpers
     def _executor_of(self, i: int) -> int:
@@ -235,12 +252,12 @@ class FastMigrator:
         return t
 
     def _inc_progress(self, d: int, i: int):
-        """P[d][i] += 1 with O(1) amortized min/max/hot maintenance (values
+        """P[d, i] += 1 with O(1) amortized min/max/hot maintenance (values
         only ever increment, so the minimum can only move up by one when its
         last holder leaves)."""
-        row = self._P[d]
-        old = row[i]
-        row[i] = old + 1
+        P = self._P
+        old = int(P[d, i])
+        P[d, i] = old + 1
         if old + 1 > self._maxval[i]:
             self._maxval[i] = old + 1
         if old == self._minval[i]:
@@ -248,8 +265,7 @@ class FastMigrator:
             if self._n_at_min[i] == 0:
                 m = old + 1
                 self._minval[i] = m
-                self._n_at_min[i] = sum(
-                    1 for dd in range(self.n_replicas) if self._P[dd][i] == m)
+                self._n_at_min[i] = int((P[:, i] == m).sum())
         if self._maxval[i] - self._minval[i] > self.delta:
             self._hot.add(i)
         else:
@@ -311,29 +327,40 @@ class FastMigrator:
             cand = sorted(self._hot)
         else:
             return
-        R, S, P = self.n_replicas, self.n_stages, self._P
+        S, P = self.n_stages, self._P
         n_done = 0
         for i in cand:
             if n_done >= self.max_migrations_per_event:
                 break
-            alive = [d for d in range(R) if (d, i) not in self.dead]
+            alive = self._alive_rows[i]
             if not alive:
                 continue
-            vals = [P[d][i] for d in range(R)]
             if self.policy == "recycle":
-                for d in range(R):
-                    if (d, i) in self.dead:
-                        j = self._next_pending(d, i)
-                        if j is not None and alive:
-                            dst = alive[self._rr % len(alive)] * S + i
-                            self._rr += 1
-                            self._migrate(j, dst, now, "fail-stop", touched)
-                            n_done += 1
+                dead_rows = self._dead_rows[i]
+                for d in ([] if dead_rows is None else dead_rows.tolist()):
+                    j = self._next_pending(d, i)
+                    if j is not None and alive:
+                        dst = alive[self._rr % len(alive)] * S + i
+                        self._rr += 1
+                        self._migrate(j, dst, now, "fail-stop", touched)
+                        n_done += 1
                 continue
-            d_min = min(range(R), key=lambda d: (vals[d], d))
-            d_max = max(alive, key=lambda d: (vals[d], -d))
+            # replica-column reductions: argmin/argmax return the first (=
+            # lowest-d) extremum, matching the reference tie-breaks
+            # min(key=(val, d)) and max(alive, key=(val, -d)); dead rows are
+            # masked below any real count (counts are >= 0) so the masked
+            # argmax only ever picks an alive replica
+            col = P[:, i]
+            d_min = int(col.argmin())
+            dead_rows = self._dead_rows[i]
+            if dead_rows is None:
+                d_max = int(col.argmax())
+            else:
+                masked = col.copy()
+                masked[dead_rows] = -1
+                d_max = int(masked.argmax())
             src_dead = (d_min, i) in self.dead
-            gap = vals[d_max] - vals[d_min]
+            gap = int(col[d_max]) - int(col[d_min])
             if not src_dead and gap <= self.delta:
                 continue
             if d_max == d_min:
@@ -479,24 +506,33 @@ class FastMigrator:
 # ====================================================== belief plumbing
 class StageSpeedCache:
     """Vectorized true-device-state -> per-(replica, stage) group-speed sync
-    for the fast engine (the first of the remaining per-device python loops
-    the ROADMAP flags for 10k+-device sweeps).
+    for the fast engine (one of the per-device python loops the ROADMAP
+    flagged for 10k+-device sweeps).
 
     The reference loop in ``TrainingSim._true_stage_speeds`` is
     ``(st.tp / tp0) * min(speeds[d] for d in st.devices)`` per stage, re-run
-    every iteration even though the plan only changes on reconfiguration.
-    Here the per-stage device-index arrays (and the ``tp/tp0`` ratios) are
-    cached per plan object and each call reduces with ``ndarray.min`` over a
-    dense speed vector — bit-identical floats, since min over float64 and the
-    single multiply are the exact operations of the reference expression.
+    every iteration even though the plan only changes on reconfiguration and
+    the cluster only changes when an event fires. Two cache levels:
 
-    The speed vector is built from ``ClusterState.speeds()``, whose dict is
-    insertion-ordered over the dense device ids ``0..n-1``.
+    * per-plan: the per-stage device-index arrays and ``tp/tp0`` ratios are
+      rebuilt only when the plan object changes;
+    * per-(plan, cluster version): the full result dict is memoized against
+      ``ClusterState.version``, so quiet iterations (no event fired, no
+      reconfig) return the previous dict without touching the arrays at all
+      — the fastsim cost-table refresh stops re-gathering speeds per stage
+      per iteration.
+
+    Each recompute reduces with ``ndarray.min`` over the registry's cached
+    effective-speed array — bit-identical floats, since min over float64 and
+    the single multiply are the exact operations of the reference
+    expression.
     """
 
     def __init__(self):
         self._plan = None
         self._entries: list = []  # ((r, s), tp_ratio, device-index array|None)
+        self._version = None
+        self._result: dict = {}
 
     def _rebuild(self, plan, tp0: int):
         self._entries = []
@@ -507,13 +543,18 @@ class StageSpeedCache:
                        if st.devices else None)
                 self._entries.append(((r, s), st.tp / tp0, ids))
         self._plan = plan
+        self._version = None
 
-    def speeds(self, plan, device_speeds: dict, tp0: int) -> dict:
+    def speeds(self, plan, effective, tp0: int, *, version=None) -> dict:
+        """``effective``: dense per-device effective-speed vector (device id
+        = index); ``version``: the cluster mutation counter (None disables
+        result memoization). The returned dict is shared — treat it as
+        read-only."""
         if plan is not self._plan:
             self._rebuild(plan, tp0)
-        # dense ids 0..n-1 in insertion order: C-speed fill, identical floats
-        vec = np.fromiter(device_speeds.values(), dtype=np.float64,
-                          count=len(device_speeds))
+        if version is not None and version == self._version:
+            return self._result
+        vec = np.asarray(effective, dtype=np.float64)
         out = {}
         for key, ratio, ids in self._entries:
             if ids is None:
@@ -521,6 +562,8 @@ class StageSpeedCache:
                 continue
             m = vec[ids].min()
             out[key] = 0.0 if m <= 0 else ratio * float(m)
+        self._version = version
+        self._result = out
         return out
 
 

@@ -77,6 +77,22 @@ class SimConfig:
         return self.dp * self.n_microbatches * self.rows_per_microbatch
 
 
+class BeliefArray(dict):
+    """The system's believed per-device speeds: the legacy dict API (the
+    policies consume ``{device: speed}``) backed by a dense numpy mirror
+    (``.arr``) kept in sync on every write — so the validation pass compares
+    belief against ground truth in one masked array comparison instead of an
+    O(n) dict walk."""
+
+    def __init__(self, n_devices: int):
+        super().__init__((i, 1.0) for i in range(n_devices))
+        self.arr = np.ones(n_devices, dtype=np.float64)
+
+    def __setitem__(self, device: int, speed: float):
+        dict.__setitem__(self, device, speed)
+        self.arr[device] = speed
+
+
 @dataclass
 class IterRecord:
     iteration: int
@@ -176,12 +192,12 @@ class TrainingSim:
         # engine keeps the reference per-device loop as the parity anchor)
         self._stage_speed_cache = StageSpeedCache() if engine == "fast" else None
         # cached liveness vector for the vectorized heartbeat path; rebuilt
-        # lazily, and only on iterations where injected events actually fired
-        # (liveness changes flow exclusively through apply_event)
+        # lazily, keyed on the registry's mutation counter (liveness changes
+        # flow exclusively through ClusterState mutators, which bump it)
         self._alive_vec = None
-        self._alive_dirty = True
+        self._alive_version = -1
         # the system's *belief* about device speeds (truth lives in cluster)
-        self.known_speeds = {d: 1.0 for d in self.cluster.devices}
+        self.known_speeds = BeliefArray(self.topo.n_devices)
         self._belief_dirty = True
         self._decision: Optional[PolicyDecision] = None
         self._failslow_backlog: list = []  # (device, true_speed, detect_at_iter)
@@ -248,16 +264,20 @@ class TrainingSim:
         Greyhound's micro-benchmark pass; the cost is charged by Detector).
         With the lifecycle's ``validation_failstop`` gate, devices the pass
         measures *dead* are reported too (speed 0.0) — the fail-stop no
-        longer waits out the heartbeat window when a validation already ran."""
-        out = []
-        for d, dev in self.cluster.devices.items():
-            p = dev.effective
-            if dev.alive and p < 0.97 and self.known_speeds.get(d, 1.0) > p:
-                out.append((d, p))
-            elif (not dev.alive and self._validation_failstop
-                  and self.known_speeds.get(d, 1.0) > 0.0):
-                out.append((d, 0.0))
-        return out
+        longer waits out the heartbeat window when a validation already ran.
+
+        One masked comparison of the registry's effective-speed array
+        against the belief mirror (``known_speeds.arr``) replaces the
+        reference O(n) dict walk; ``np.nonzero`` preserves the ascending
+        device-id report order, and a dead device's effective speed is
+        exactly the 0.0 the reference appended."""
+        eff = self.cluster.effective()
+        alive = self.cluster.alive_mask()
+        known = self.known_speeds.arr
+        mask = alive & (eff < 0.97) & (known > eff)
+        if self._validation_failstop:
+            mask = mask | (~alive & (known > 0.0))
+        return [(int(d), float(eff[d])) for d in np.nonzero(mask)[0]]
 
     # ------------------------------------------------------------- helpers
     def _stage_shares(self, plan, replica: int = 0) -> dict:
@@ -271,9 +291,14 @@ class TrainingSim:
         """Effective speed of each (replica, stage) group under TRUE device
         state: (k/tp0) * min p over the group; 0 if any member is dead."""
         tp0 = self.cfg.tp
-        speeds = self.cluster.speeds()
         if self._stage_speed_cache is not None:
-            return self._stage_speed_cache.speeds(plan, speeds, tp0)
+            # fast engine: reduce over the registry's cached effective array,
+            # memoized on (plan, cluster version) — quiet iterations skip the
+            # recompute entirely
+            return self._stage_speed_cache.speeds(
+                plan, self.cluster.effective(), tp0,
+                version=self.cluster.version)
+        speeds = self.cluster.speeds()
         out = {}
         for r, rep in enumerate(plan.replicas):
             for s, st in enumerate(rep.stages):
@@ -341,8 +366,6 @@ class TrainingSim:
             apply_event(ev, self.cluster, self.now, on_rejoin=self._on_rejoin)
             self.event_log.append(ev)
             fired.append(ev)
-        if fired:
-            self._alive_dirty = True  # liveness may have changed
         return fired
 
     def _expected_time(self, workload, decision) -> float:
@@ -414,9 +437,9 @@ class TrainingSim:
         # engine beats the whole fleet in one vectorized call; the python
         # engine keeps the reference per-device loop as the parity anchor.
         if isinstance(self.detector.heartbeat, FastHeartbeat):
-            if self._alive_dirty:
+            if self._alive_version != self.cluster.version:
                 self._alive_vec = self.cluster.alive_mask()
-                self._alive_dirty = False
+                self._alive_version = self.cluster.version
             self.detector.heartbeat.beat_all(self._alive_vec, self.now)
         else:
             for d, dev in self.cluster.devices.items():

@@ -111,6 +111,34 @@ class Scheduler:
     # ablation switches (Fig. 11): progressive adaptation components
     enable_selective: bool = True  # §6.1 selective exclusion (else whole-group)
     enable_repartition: bool = True  # §6.2 layer repartition
+    # False => skip the wall-clock measurement entirely (plan_overhead_s is
+    # reported as 0.0). Set by ResiHPPolicy when a plan_overhead_model /
+    # plan_overhead_fixed makes the measurement dead weight — the modeled hot
+    # loop stays syscall-free and plan-cache hits are truly free.
+    measure_overhead: bool = True
+    # plan cache: ``adapt`` is a pure function of (plan, speeds, failed,
+    # quarantined, risk), so repeated reconfigurations under flapping /
+    # poisson storms that revisit a failure signature skip the O(S·n²)
+    # repartition DP + TP search. 0 disables. Cached AdaptationPlans are
+    # shared — treat them as read-only (every in-repo consumer does).
+    plan_cache_size: int = 256
+    _cache: dict = field(default_factory=dict, init=False, repr=False,
+                         compare=False)
+
+    @staticmethod
+    def _signature(speeds: dict, failed, quarantined, device_risk):
+        """Frozen (failed, quarantined, risk-bucketed speeds) cache key.
+        Healthy (1.0) speeds are elided so the signature scales with the
+        failure count, not the fleet; risk scores are bucketed at 1e-6 —
+        fine enough that a tie-break could only flip between devices whose
+        estimated hazards are practically indistinguishable."""
+        sig_speeds = tuple(sorted(
+            (d, v) for d, v in speeds.items() if v != 1.0))
+        sig_risk = (tuple(sorted((d, round(r, 6))
+                                 for d, r in device_risk.items()))
+                    if device_risk else None)
+        return (sig_speeds, frozenset(failed), frozenset(quarantined),
+                sig_risk)
 
     # ------------------------------------------------------------ adaptation
     def adapt(self, plan: ParallelPlan, speeds: dict, *,
@@ -125,7 +153,28 @@ class Scheduler:
         hazard estimator — equal-throughput placement choices (TP membership,
         standby pull-in) prefer low-hazard devices; None (the default) keeps
         selection byte-identical to the hazard-blind planner."""
-        t0 = time.perf_counter()
+        key = entry = None
+        if self.plan_cache_size > 0:
+            key = self._signature(speeds, failed, quarantined, device_risk)
+            entry = self._cache.get(key)
+            # the entry pins its plan object, so an `is` match cannot be an
+            # id-reuse collision; a different plan under the same signature
+            # (rare: only multi-plan callers) simply recomputes
+            if entry is not None and entry[0] is plan:
+                return entry[1]
+        ad = self._adapt_uncached(plan, speeds, failed=failed,
+                                  quarantined=quarantined,
+                                  device_risk=device_risk)
+        if key is not None:
+            if len(self._cache) >= self.plan_cache_size:
+                self._cache.clear()
+            self._cache[key] = (plan, ad)
+        return ad
+
+    def _adapt_uncached(self, plan: ParallelPlan, speeds: dict, *,
+                        failed=frozenset(), quarantined=frozenset(),
+                        device_risk=None) -> AdaptationPlan:
+        t0 = time.perf_counter() if self.measure_overhead else 0.0
         failed = (set(failed) | {d for d, v in speeds.items() if v <= 0.0}
                   | set(quarantined))
         notes = []
@@ -225,7 +274,8 @@ class Scheduler:
             stage_speeds=eff,
             dead_stages=tuple(dead),
             restore_required=restore_required,
-            plan_overhead_s=time.perf_counter() - t0,
+            plan_overhead_s=(time.perf_counter() - t0
+                             if self.measure_overhead else 0.0),
             notes=notes,
         )
 

@@ -1,0 +1,109 @@
+"""Array-native ClusterState: the ground truth lives in dense numpy arrays,
+the legacy dict/object API is a write-through adapter view, and every
+mutation bumps ``version`` / invalidates the cached slices — the contract
+the simulator hot path (validation scan, heartbeat mask, stage-speed cache)
+keys on."""
+import numpy as np
+import pytest
+
+from repro.cluster.registry import ClusterState, ClusterTopology, DeviceView
+
+
+@pytest.fixture
+def cluster():
+    return ClusterState(ClusterTopology(2, devices_per_node=4))
+
+
+def test_adapter_view_reads_arrays(cluster):
+    d = cluster.devices[3]
+    assert isinstance(d, DeviceView)
+    assert d.id == 3 and d.node == 0
+    assert d.alive and d.speed == 1.0 and d.net_scale == 1.0
+    assert d.effective == 1.0
+    assert cluster.devices[4].node == 1
+
+
+def test_adapter_view_writes_through_and_bumps_version(cluster):
+    v0 = cluster.version
+    cluster.devices[2].speed = 0.25
+    assert cluster.version > v0
+    assert cluster.effective()[2] == 0.25
+    assert cluster.speeds()[2] == 0.25
+    cluster.devices[2].alive = False
+    assert cluster.effective()[2] == 0.0
+
+
+def test_device_map_is_dict_shaped(cluster):
+    n = cluster.topo.n_devices
+    assert len(cluster.devices) == n
+    assert list(cluster.devices) == list(range(n))
+    assert list(cluster.devices.keys()) == list(range(n))
+    assert [i for i, _ in cluster.devices.items()] == list(range(n))
+    assert all(d.alive for d in cluster.devices.values())
+    assert 0 in cluster.devices and n not in cluster.devices
+    with pytest.raises(KeyError):
+        cluster.devices[n]
+
+
+def test_cached_slices_invalidate_on_every_mutator(cluster):
+    """speeds()/effective() are rebuilt lazily after each injection method —
+    stale reads would mean the simulator plans against dead state."""
+    assert cluster.speeds() is cluster.speeds()  # cached between mutations
+    cluster.fail_stop(1)
+    assert cluster.speeds()[1] == 0.0
+    cluster.fail_slow(2, 0.5)
+    assert cluster.speeds()[2] == 0.5
+    cluster.degrade_network(0, 0.25)
+    eff = 1.0 / (0.7 + 0.3 / 0.25)
+    assert cluster.speeds()[0] == pytest.approx(eff)
+    assert cluster.speeds()[1] == 0.0  # dead stays dead through net events
+    cluster.restore_network(0)
+    assert cluster.speeds()[0] == 1.0
+    assert cluster.speeds()[2] == 0.5  # compute straggler stays slow
+    cluster.repair(1, now=7.0)
+    assert cluster.speeds()[1] == 1.0
+
+
+def test_effective_and_alive_mask_are_read_only_views(cluster):
+    eff = cluster.effective()
+    mask = cluster.alive_mask()
+    for arr in (eff, mask):
+        with pytest.raises(ValueError):
+            arr[0] = 0
+    cluster.fail_stop(0)
+    assert not cluster.alive_mask()[0] and cluster.effective()[0] == 0.0
+
+
+def test_effective_matches_device_property_bit_for_bit(cluster):
+    cluster.fail_slow(1, 1.0 / 3.0)
+    cluster.degrade_network(0, 1.0 / 7.0)
+    eff = cluster.effective()
+    for i, dev in cluster.devices.items():
+        assert eff[i] == dev.effective  # exact float equality
+
+
+def test_node_bookkeeping(cluster):
+    assert cluster.node_devices(0) == [0, 1, 2, 3]
+    assert cluster.node_devices(1) == [4, 5, 6, 7]
+    assert list(cluster.node_of) == [0, 0, 0, 0, 1, 1, 1, 1]
+    cluster.fail_stop_node(1)
+    assert cluster.alive_ids() == [0, 1, 2, 3]
+
+
+def test_injection_log_format_unchanged(cluster):
+    cluster.fail_stop(1, now=1.0)
+    cluster.fail_slow(2, 0.5, now=2.0)
+    cluster.repair(1, now=3.0, speed=0.9)
+    assert cluster.events == [
+        (1.0, "fail-stop", 1, 0.0),
+        (2.0, "fail-slow", 2, 0.5),
+        (3.0, "repair", 1, 0.9),
+    ]
+
+
+def test_age_tracks_last_service_entry(cluster):
+    assert list(cluster.ages(10.0)) == [10.0] * 8
+    cluster.fail_stop(3, now=4.0)
+    cluster.repair(3, now=6.0)
+    ages = cluster.ages(10.0)
+    assert ages[3] == 4.0 and ages[0] == 10.0

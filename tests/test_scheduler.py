@@ -207,3 +207,88 @@ def test_adaptation_restore_required():
         speeds[d] = 0.0
     ad = sch.adapt(plan, speeds)
     assert ad.restore_required
+
+
+# ------------------------------------------------------------- plan cache
+def test_adapt_plan_cache_hits_on_repeated_signature():
+    """Repeated reconfigurations under the same failure signature (flapping
+    / poisson storms) skip the repartition DP + TP search entirely: the
+    cached AdaptationPlan object itself is returned."""
+    plan = initial_plan(16, dp=2, pp=4, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 16)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[5] = 0.0
+    first = sch.adapt(plan, speeds, failed={5})
+    assert sch.adapt(plan, speeds, failed={5}) is first
+    # a different signature recomputes...
+    speeds[6] = 0.5
+    other = sch.adapt(plan, speeds, failed={5})
+    assert other is not first
+    # ...and both stay cached independently
+    del speeds[6]
+    speeds[6] = 1.0
+    assert sch.adapt(plan, speeds, failed={5}) is first
+
+
+def test_adapt_plan_cache_keys_on_quarantine_and_risk():
+    plan = initial_plan(8, dp=1, pp=2, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 8)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[1] = 0.0
+    blind = sch.adapt(plan, speeds)
+    aware = sch.adapt(plan, speeds, device_risk={2: 6.0})
+    assert aware is not blind
+    assert 2 not in aware.plan.replicas[0].stages[0].devices
+    quar = sch.adapt(plan, speeds, quarantined=frozenset({2}))
+    assert quar is not blind and quar is not aware
+    # hits come back per-signature
+    assert sch.adapt(plan, speeds) is blind
+    assert sch.adapt(plan, speeds, device_risk={2: 6.0}) is aware
+
+
+def test_adapt_plan_cache_disabled():
+    plan = initial_plan(8, dp=1, pp=2, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 8, plan_cache_size=0)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[1] = 0.0
+    a, b = sch.adapt(plan, speeds), sch.adapt(plan, speeds)
+    assert a is not b
+    assert a.plan == b.plan  # adapt stays a pure function either way
+
+
+def test_adapt_plan_cache_is_per_plan_object():
+    """Same failure signature against a different plan must not serve the
+    cached adaptation of the first plan."""
+    sch = Scheduler(layer_costs=[1.0] * 8)
+    plan_a = initial_plan(8, dp=1, pp=2, tp=4)
+    plan_b = initial_plan(8, dp=2, pp=2, tp=2)
+    speeds = {d: 1.0 for d in plan_a.devices}
+    speeds[1] = 0.0
+    ad_a = sch.adapt(plan_a, speeds)
+    ad_b = sch.adapt(plan_b, speeds)
+    assert ad_b is not ad_a
+    assert ad_b.plan.replicas[0].stages[0].tp != ad_a.plan.replicas[0].stages[0].tp
+
+
+def test_measure_overhead_off_reports_zero():
+    plan = initial_plan(8, dp=1, pp=2, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 8, measure_overhead=False)
+    speeds = {d: 1.0 for d in plan.devices}
+    speeds[1] = 0.0
+    assert sch.adapt(plan, speeds).plan_overhead_s == 0.0
+    timed = Scheduler(layer_costs=[1.0] * 8)
+    assert timed.adapt(plan, speeds).plan_overhead_s > 0.0
+
+
+def test_resihp_policy_wires_measure_overhead():
+    """The measured wall clock is dead weight whenever a fixed or modeled
+    planning charge is set — the policy's scheduler must skip it."""
+    from repro.cluster.baselines import ResiHPPolicy
+
+    plan = initial_plan(8, dp=1, pp=2, tp=4)
+    measured = ResiHPPolicy(plan, [1.0] * 8)
+    assert measured.scheduler.measure_overhead
+    fixed = ResiHPPolicy(plan, [1.0] * 8, plan_overhead_fixed=0.25)
+    assert not fixed.scheduler.measure_overhead
+    modeled = ResiHPPolicy(plan, [1.0] * 8, plan_overhead_model=True)
+    assert not modeled.scheduler.measure_overhead
