@@ -328,6 +328,9 @@ class ResiHPPolicy(BasePolicy):
     hazard: Optional[object] = None
 
     def __post_init__(self):
+        # the plan whose layers are currently resident on the devices — what
+        # a reconfiguration's layer-transfer volume must be diffed against
+        self._prev_plan = self.plan0
         if self.lifecycle is True:
             from repro.core.detector.lifecycle import LifecycleConfig
 
@@ -366,9 +369,14 @@ class ResiHPPolicy(BasePolicy):
                                   device_risk=risk)
         overhead = 0.0
         if changed:
+            # layer-transfer volume: layers each stage must *fetch* relative
+            # to the plan currently executing — not plan0, which overcharged
+            # every reconfiguration after the first (consecutive exclusion
+            # plans re-paid transfers for layers already in place)
             moved_layers = 0
             for s, (old, new) in enumerate(
-                zip(self.plan0.replicas[0].stages, ad.plan.replicas[0].stages)
+                zip(self._prev_plan.replicas[0].stages,
+                    ad.plan.replicas[0].stages)
             ):
                 moved_layers += len(set(new.layers) - set(old.layers))
             if self.plan_overhead_fixed is not None:
@@ -383,6 +391,7 @@ class ResiHPPolicy(BasePolicy):
                 + self.group_rebuild_s
                 + moved_layers * self.layer_transfer_s_per_layer
             )
+        self._prev_plan = ad.plan
         return PolicyDecision(
             plan=ad.plan,
             stage_speeds=ad.stage_speeds,

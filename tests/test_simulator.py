@@ -102,3 +102,36 @@ def test_aborted_run_reports_infinite_iteration():
     sim = _run("greyhound", [(10.0, lambda c, now: c.fail_stop(5, now))], 40)
     assert sim.aborted
     assert math.isinf(sim.trace[-1].duration)
+
+
+def test_layer_transfer_charged_against_previous_plan():
+    """Consecutive exclusion plans must pay only the *incremental* layer
+    movement: the second reconfiguration diffs against the plan currently
+    executing, not plan0 (which re-paid transfers for layers already in
+    place) — and a recovery back to the plan0 layout pays to move the
+    layers back instead of being charged zero."""
+    from repro.cluster.baselines import ResiHPPolicy
+    from repro.core.scheduler.plan import initial_plan
+
+    plan0 = initial_plan(16, dp=2, pp=4, tp=4)
+    pol = ResiHPPolicy(plan0, [1.0] * 16, plan_overhead_fixed=0.0,
+                       group_rebuild_s=0.0, layer_transfer_s_per_layer=1.0)
+    healthy = {d: 1.0 for d in plan0.devices}
+
+    # failure in (replica 0, stage 1): repartition shrinks the stage
+    speeds = dict(healthy)
+    speeds[5] = 0.0
+    first = pol.decide(speeds, changed=True)
+    assert first.reconfig_overhead_s > 0.0
+    moved_first = first.reconfig_overhead_s
+
+    # identical failure state re-planned: same plan, nothing left to move
+    again = pol.decide(speeds, changed=True)
+    assert again.plan == first.plan
+    assert again.reconfig_overhead_s == 0.0  # plan0-diff would re-pay here
+
+    # recovery to the plan0 layout: the layers must move *back*, so the
+    # charge equals the first move's volume (plan0-diff would charge 0.0)
+    back = pol.decide(healthy, changed=True)
+    assert back.plan.replicas[0].stages == plan0.replicas[0].stages
+    assert back.reconfig_overhead_s == moved_first

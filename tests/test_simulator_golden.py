@@ -46,6 +46,13 @@ def _observed(sim, compiled) -> dict:
         "n_iters": len(sim.trace),
         "aborted": sim.aborted,
         "avg_throughput": sim.avg_throughput(skip=2),
+        # elapsed-time view: t_start and the session throughput see the
+        # reconfiguration / stall / probe charges that per-iteration
+        # durations deliberately exclude — without them a change to
+        # overhead accounting (e.g. the layer-transfer charge) would be
+        # invisible to this golden
+        "session_throughput": sim.session_throughput(skip=2),
+        "t_starts": [r.t_start for r in sim.trace],
         "durations": [r.duration for r in sim.trace],
         "iter_events": [[e[0] for e in r.events] for r in sim.trace],
     }
@@ -91,3 +98,11 @@ def test_throughput_matches_golden(golden, observed):
         golden["avg_throughput"], rel=1e-9)
     assert observed["durations"] == pytest.approx(
         golden["durations"], rel=1e-9)
+
+
+def test_elapsed_time_matches_golden(golden, observed):
+    """Overhead accounting (reconfig / stall charges advancing ``now``) is
+    pinned through the iteration start times and the session throughput."""
+    assert observed["session_throughput"] == pytest.approx(
+        golden["session_throughput"], rel=1e-9)
+    assert observed["t_starts"] == pytest.approx(golden["t_starts"], rel=1e-9)
