@@ -17,7 +17,11 @@ same worn parts.
 quarantine + ramp-aware drift + rejoin admission — default-off elsewhere);
 ``resihp+hz`` adds ``ResiHPPolicy(hazard=...)`` on top (hazard-keyed
 quarantine + risk-aware placement): the risk-aware planner, against
-``resihp+lc`` as the hazard-blind reference. Rows carry the lifecycle /
+``resihp+lc`` as the hazard-blind reference. ``resihp+ntp`` is ResiHP with
+``ResiHPPolicy(ntp=...)`` enabled (nonuniform TP shard widths): shrink-shard
+competes with Eq. 4 exclusion per affected group, against plain ``resihp``
+as the exclusion-only reference — its signature win is the
+``thermal_throttle_fleet`` many-mild-stragglers family. Rows carry the lifecycle /
 detector columns (validations, false alarms, quarantines, probes) plus the
 session throughput (samples per second of *elapsed* time, reconfiguration
 and stall charges included) — the metric a repeat-offender's
@@ -41,6 +45,11 @@ SWEEP = {
         "poisson_storm", rate=4.0 / span, t_end=span, mttr=0.25 * span),
     "degraded_rejoins": lambda span: scenarios.get(
         "degraded_rejoins", span=span),
+    # many-mild-stragglers family (fleet thermal/power capping): the NTP
+    # shrink-shard vs exclusion stress case — every group keeps running, so
+    # planning k*min(p) vs efficiency*sum(p) is the whole difference
+    "thermal_throttle_fleet": lambda span: scenarios.get(
+        "thermal_throttle_fleet", span=span),
     # per-device hazard families (PR 4): age-dependent MTTF, repeat offenders
     "aging_fleet": lambda span: scenarios.get("aging_fleet", span=span),
     "lemon_devices": lambda span: scenarios.get("lemon_devices", span=span),
@@ -59,6 +68,9 @@ POLICIES = {
     "resihp": ("resihp", {"plan_overhead_model": True}),
     "resihp+lc": ("resihp", {"lifecycle": True, "plan_overhead_model": True}),
     "resihp+hz": ("resihp", {"hazard": True, "plan_overhead_model": True}),
+    # nonuniform TP shard widths (default-off ResiHPPolicy(ntp=) switch):
+    # shrink-shard competes with Eq. 4 exclusion per affected group
+    "resihp+ntp": ("resihp", {"ntp": True, "plan_overhead_model": True}),
     "recycle+": ("recycle+", {}),
     "oobleck+": ("oobleck+", {}),
 }
@@ -112,6 +124,11 @@ def derive_rows(key_prefix: str, rs: dict) -> list:
                        f" deferred={lc.get('rejoins_deferred', 0)}"
                        f" {sess}"
                        f" vs_blind={r['session_throughput'] / max(blind, 1e-9):.2f}x")
+        elif p == "resihp+ntp":
+            # the adaptation-axis comparison: shrink-shard vs exclusion-only
+            # planning on the same scenario (>1.00x = NTP wins)
+            derived = (f"{sess}"
+                       f" vs_excl={t / max(resi, 1e-9):.2f}x")
         elif p == "resihp":
             derived = (f"n_events={r['n_events']}"
                        f" vals={det['validations']}"

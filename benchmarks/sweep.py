@@ -23,9 +23,13 @@ Usage:
 
     PYTHONPATH=src python -m benchmarks.sweep [--workers N] [--serial]
         [--quick] [--full] [--seeds K] [--engine fast|python]
+        [--scenarios a,b] [--policies x,y] [--out NAME]
 
 Writes ``results/scenarios_sweep.json`` (the same artifact the serial bench
 produces; with ``--seeds K`` > 1, cells are keyed ``model/scenario/sK``).
+``--scenarios`` / ``--policies`` restrict the grid to a sub-sweep (e.g. the
+nightly ``resihp+ntp`` vs ``resihp`` quick row) and ``--out`` renames the
+artifact so a sub-sweep never clobbers the full one.
 """
 from __future__ import annotations
 
@@ -97,16 +101,22 @@ def sweep(cells, *, workers: int = 0, engine: str = "fast",
     return out
 
 
-def main(quick=False, engine="fast", full=False, workers=0, seeds=1):
+def main(quick=False, engine="fast", full=False, workers=0, seeds=1,
+         scenarios=None, policies=None, out_name="scenarios_sweep"):
     models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
     iters = 80 if quick else 160
+    for sc in scenarios or ():
+        assert sc in bench_scenarios.SWEEP, (sc, sorted(bench_scenarios.SWEEP))
+    for p in policies or ():
+        assert p in bench_scenarios.POLICIES, (p, sorted(bench_scenarios.POLICIES))
     # the hazard families keep the full 160-iteration session even in
     # --quick mode, exactly like the serial bench (slow renewal dynamics)
-    cells = build_grid(models=models, seeds=range(seeds), iters=iters)
+    cells = build_grid(models=models, scenarios=scenarios, policies=policies,
+                       seeds=range(seeds), iters=iters)
     if workers <= 0:
         workers = min(len(cells), os.cpu_count() or 1)
     out = sweep(cells, workers=workers, engine=engine, full=full)
-    write_result("scenarios_sweep", out)
+    write_result(out_name, out)
     rows = []
     for key, rs in out.items():
         rows += bench_scenarios.derive_rows(f"scenarios/{key}", rs)
@@ -129,6 +139,15 @@ if __name__ == "__main__":
                     help="force the in-process serial reference path")
     ap.add_argument("--seeds", type=int, default=1,
                     help="seeds per cell (adds a /sK key level when > 1)")
+    ap.add_argument("--scenarios", type=str, default=None,
+                    help="comma-separated scenario subset (default: all)")
+    ap.add_argument("--policies", type=str, default=None,
+                    help="comma-separated policy subset (default: all)")
+    ap.add_argument("--out", type=str, default="scenarios_sweep",
+                    help="results/<out>.json artifact name")
     args = ap.parse_args()
     emit(main(quick=args.quick, engine=args.engine, full=args.full,
-              workers=1 if args.serial else args.workers, seeds=args.seeds))
+              workers=1 if args.serial else args.workers, seeds=args.seeds,
+              scenarios=args.scenarios.split(",") if args.scenarios else None,
+              policies=args.policies.split(",") if args.policies else None,
+              out_name=args.out))

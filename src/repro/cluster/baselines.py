@@ -326,6 +326,14 @@ class ResiHPPolicy(BasePolicy):
     # both fed by the lifecycle's FailureHistory — so enabling ``hazard``
     # turns the default lifecycle on if it was off.
     hazard: Optional[object] = None
+    # nonuniform TP shard widths (NTPConfig; ``True`` for defaults; default
+    # OFF): a mildly-slow device keeps a proportionally smaller shard
+    # instead of being excluded — see tp_reconfig.shrink_shard_candidate.
+    ntp: Optional[object] = None
+    # physical topology (device -> node; TrainingSim wires topo.node_of) so
+    # the Scheduler honors the §6.1 node-local-standby contract. None =>
+    # plan-only use without a topology, whole-pool standby offers.
+    node_of: Optional[object] = None
 
     def __post_init__(self):
         # the plan whose layers are currently resident on the devices — what
@@ -345,12 +353,22 @@ class ResiHPPolicy(BasePolicy):
             self.lifecycle = LifecycleConfig()
         if self.plan_overhead_model is True:
             self.plan_overhead_model = PlanOverheadModel()
+        if self.ntp is True:
+            from repro.core.scheduler.tp_reconfig import NTPConfig
+
+            self.ntp = NTPConfig()
         if self.scheduler is None:
             self.scheduler = Scheduler(
                 layer_costs=list(self.layer_costs), k_min=self.k_min,
                 delta=self.delta,
                 enable_selective=self.enable_selective,
                 enable_repartition=self.enable_repartition,
+                ntp=self.ntp,
+                node_of=self.node_of,
+                # effective speeds are normalized against the healthy plan's
+                # widest group even when re-adapting a shrunk plan
+                baseline_tp=max(st.tp for rep in self.plan0.replicas
+                                for st in rep.stages),
                 # with a fixed or modeled planning charge the measured wall
                 # clock is never read — keep the hot loop syscall-free so
                 # plan-cache hits are truly free

@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.detector.dag_sim import ChunkId
 from repro.core.scheduler.migration import MigrationEvent, SimResult
+from repro.core.scheduler.plan import NTP_EFFICIENCY
 from repro.engine.schedules import make_schedule
 
 _KIND_F, _KIND_B, _KIND_W = 0, 1, 2
@@ -525,12 +526,16 @@ class StageSpeedCache:
     Each recompute reduces with ``ndarray.min`` over the registry's cached
     effective-speed array — bit-identical floats, since min over float64 and
     the single multiply are the exact operations of the reference
-    expression.
+    expression. NTP stages (``StagePlan.shard_fractions``) reduce with an
+    elementwise divide + ``ndarray.max`` instead — again the same IEEE
+    operations as the reference ``max(f / v for ...)`` loop, so parity stays
+    exact on nonuniform-width plans too.
     """
 
     def __init__(self):
         self._plan = None
-        self._entries: list = []  # ((r, s), tp_ratio, device-index array|None)
+        # ((r, s), tp_ratio, device-index array|None, shard-width array|None)
+        self._entries: list = []
         self._version = None
         self._result: dict = {}
 
@@ -541,7 +546,10 @@ class StageSpeedCache:
                 ids = (np.fromiter(st.devices, dtype=np.intp,
                                    count=len(st.devices))
                        if st.devices else None)
-                self._entries.append(((r, s), st.tp / tp0, ids))
+                fr = (np.fromiter(st.shard_fractions, dtype=np.float64,
+                                  count=len(st.shard_fractions))
+                      if st.shard_fractions is not None else None)
+                self._entries.append(((r, s), st.tp / tp0, ids, fr))
         self._plan = plan
         self._version = None
 
@@ -556,12 +564,19 @@ class StageSpeedCache:
             return self._result
         vec = np.asarray(effective, dtype=np.float64)
         out = {}
-        for key, ratio, ids in self._entries:
+        for key, ratio, ids, fr in self._entries:
             if ids is None:
                 out[key] = 0.0
                 continue
-            m = vec[ids].min()
-            out[key] = 0.0 if m <= 0 else ratio * float(m)
+            g = vec[ids]
+            m = g.min()
+            if m <= 0:
+                out[key] = 0.0
+            elif fr is not None:
+                worst = float((fr / g).max())
+                out[key] = NTP_EFFICIENCY / (tp0 * worst)
+            else:
+                out[key] = ratio * float(m)
         self._version = version
         self._result = out
         return out

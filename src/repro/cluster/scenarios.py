@@ -49,6 +49,10 @@ name                    models / used by
                         gradually (step ramps) to different severities, some
                         recovering — the hardest case for change-point
                         detection; ``bench_scenarios``
+``thermal_throttle_fleet`` many mild stragglers at once — a fleet fraction
+                        throttles to 0.7–0.9x (thermal/power capping): the
+                        shrink-shard (NTP) vs exclusion stress family;
+                        ``bench_scenarios``
 ``poisson_storm``       memoryless background failure process with a
                         fail-stop/fail-slow mix and exponential repair times
                         (MTTF/MTTR fleet model); ``bench_scenarios``
@@ -82,7 +86,8 @@ from repro.cluster.registry import ClusterTopology
 __all__ = [
     "FailureScenario", "Compose", "FailStop", "FailSlow", "TransientFlap",
     "NetworkDegrade", "Rejoin", "MixedFailures", "RandomFailSlow",
-    "PoissonFailures", "CorrelatedRackStorm", "TimelineScenario",
+    "ThermalThrottleFleet", "PoissonFailures", "CorrelatedRackStorm",
+    "TimelineScenario",
     "HazardConfig", "register", "get", "names",
 ]
 
@@ -282,6 +287,38 @@ class RandomFailSlow(FailureScenario):
         d = int(rng.integers(0, topo.n_devices))
         sev = float(rng.choice(list(self.severities)))
         yield self._ev(t, "fail-slow", d, sev)
+
+
+@dataclass
+class ThermalThrottleFleet(FailureScenario):
+    """Many *mild* stragglers at once: a ``frac`` share of the fleet throttles
+    to a severity drawn from ``severity`` (0.7–0.9 = thermal/power capping,
+    not hardware faults), at staggered times inside ``window * span``.
+
+    The stress case for the adaptation axis choice: every affected TP group
+    keeps running, so exclusion-style planning either drags the whole group
+    to the straggler's rate (k * min p) or throws a barely-degraded device
+    away — while shrink-shard (NTP widths ∝ p_i) recovers ~sum(p_i) per
+    group. With ``recover_after`` set, devices cool down and return to full
+    speed (a second ramp of replans back to uniform widths)."""
+    span: float
+    frac: float = 0.3
+    severity: tuple = (0.7, 0.9)
+    window: tuple = (0.08, 0.55)
+    recover_after: Optional[float] = None  # seconds of throttling, if any
+
+    def events(self, topo, rng):
+        n = max(1, int(round(self.frac * topo.n_devices)))
+        devices = rng.permutation(topo.n_devices)[:n]
+        lo, hi = self.window
+        times = rng.uniform(lo * self.span, hi * self.span, size=n)
+        sevs = rng.uniform(self.severity[0], self.severity[1], size=n)
+        for i in range(n):
+            d = int(devices[i])
+            yield self._ev(float(times[i]), "fail-slow", d, float(sevs[i]))
+            if self.recover_after is not None:
+                yield self._ev(float(times[i]) + self.recover_after,
+                               "rejoin", d)
 
 
 @dataclass
@@ -597,6 +634,17 @@ def _degraded_rejoins(span: float = 160.0,
         FailStop(at=0.45 * span, device=11),
         Rejoin(device=11, at=0.60 * span, speed=recover_speed),
     ])
+
+
+@register("thermal_throttle_fleet")
+def _thermal_throttle_fleet(span: float = 160.0, frac: float = 0.3,
+                            severity: tuple = (0.7, 0.9),
+                            recover_after: Optional[float] = None,
+                            ) -> FailureScenario:
+    # many mild stragglers at once (fleet-wide thermal/power capping): the
+    # scenario family where shrink-shard (NTP) should dominate exclusion
+    return ThermalThrottleFleet(span=span, frac=frac, severity=severity,
+                                recover_after=recover_after)
 
 
 @register("poisson_storm")

@@ -39,7 +39,7 @@ from repro.core.detector.lifecycle import LifecycleManager
 from repro.core.detector.predictor import MicroBatchTimePredictor
 from repro.core.detector.dag_sim import ChunkId
 from repro.core.scheduler.migration import ProgressAwareMigrator
-from repro.core.scheduler.plan import initial_plan
+from repro.core.scheduler.plan import NTP_EFFICIENCY, initial_plan
 
 
 @dataclass
@@ -130,8 +130,13 @@ class TrainingSim:
         self.plan0 = initial_plan(
             cfg.n_layers, cfg.dp, cfg.pp, cfg.tp,
             microbatches=cfg.n_microbatches, schedule=cfg.schedule)
+        pk = dict(policy_kwargs or {})
+        if policy_name.lower() == "resihp":
+            # the §6.1 node-local-standby contract needs the physical
+            # topology; explicit policy_kwargs (incl. node_of=None) win
+            pk.setdefault("node_of", self.topo.node_of)
         self.policy: BasePolicy = make_policy(
-            policy_name, self.plan0, self.layer_costs, **(policy_kwargs or {}))
+            policy_name, self.plan0, self.layer_costs, **pk)
         self.gen = WorkloadGen(cfg.seq_len, cfg.dp, cfg.n_microbatches,
                                rows_per_microbatch=cfg.rows_per_microbatch,
                                seed=cfg.seed)
@@ -289,7 +294,10 @@ class TrainingSim:
 
     def _true_stage_speeds(self, plan) -> dict:
         """Effective speed of each (replica, stage) group under TRUE device
-        state: (k/tp0) * min p over the group; 0 if any member is dead."""
+        state: (k/tp0) * min p over the group; 0 if any member is dead. A
+        stage running nonuniform shard widths (NTP) instead pays each
+        member's width over its speed — NTP_EFFICIENCY / (tp0 * max f_i/p_i)
+        — so a well-matched width assignment realizes ~sum(p_i)."""
         tp0 = self.cfg.tp
         if self._stage_speed_cache is not None:
             # fast engine: reduce over the registry's cached effective array,
@@ -306,7 +314,13 @@ class TrainingSim:
                     out[(r, s)] = 0.0
                     continue
                 vals = [speeds.get(d, 0.0) for d in st.devices]
-                out[(r, s)] = 0.0 if min(vals) <= 0 else (st.tp / tp0) * min(vals)
+                if min(vals) <= 0:
+                    out[(r, s)] = 0.0
+                elif st.shard_fractions is not None:
+                    worst = max(f / v for f, v in zip(st.shard_fractions, vals))
+                    out[(r, s)] = NTP_EFFICIENCY / (tp0 * worst)
+                else:
+                    out[(r, s)] = (st.tp / tp0) * min(vals)
         return out
 
     # ------------------------------------------------------------ schedule

@@ -15,10 +15,35 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 
+# Efficiency of a TP group running *nonuniform* shard widths relative to an
+# equal-width group of the same aggregate speed: ragged all-reduce segments
+# and per-rank kernel-shape divergence cost a few percent (NTP paper,
+# arxiv 2504.06095). A system property of the collective implementation, so
+# it lives with the plan data and both the planner's estimate and the
+# simulator's ground truth default to it.
+NTP_EFFICIENCY = 0.92
+
+
 @dataclass(frozen=True)
 class StagePlan:
     devices: tuple  # device ids in this TP group (sorted)
     layers: tuple  # global layer indices assigned to this stage (contiguous)
+    # nonuniform TP (NTP): per-device shard widths, aligned with ``devices``.
+    # None (the default) = uniform 1/tp shards, the classic Megatron layout.
+    shard_fractions: Optional[tuple] = None
+
+    def __post_init__(self):
+        fr = self.shard_fractions
+        if fr is None:
+            return
+        if len(fr) != len(self.devices):
+            raise ValueError(
+                f"shard_fractions needs one width per device: "
+                f"{len(fr)} widths for {len(self.devices)} devices")
+        if any(f <= 0.0 for f in fr):
+            raise ValueError(f"shard_fractions must be positive: {fr}")
+        if abs(sum(fr) - 1.0) > 1e-6:
+            raise ValueError(f"shard_fractions must sum to 1: sum={sum(fr)!r}")
 
     @property
     def tp(self) -> int:
@@ -85,7 +110,12 @@ class ParallelPlan:
     def summary(self) -> str:
         lines = []
         for r, rep in enumerate(self.replicas):
-            cells = [f"s{i}:tp{s.tp}xL{s.n_layers}" for i, s in enumerate(rep.stages)]
+            cells = [
+                f"s{i}:tp{s.tp}xL{s.n_layers}"
+                + ("w[" + "/".join(f"{f:.2f}" for f in s.shard_fractions) + "]"
+                   if s.shard_fractions is not None else "")
+                for i, s in enumerate(rep.stages)
+            ]
             lines.append(f"dp{r}[" + " ".join(cells) + "]")
         if self.standby:
             lines.append(f"standby={list(self.standby)}")

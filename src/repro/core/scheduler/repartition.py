@@ -54,10 +54,16 @@ def repartition_layers(layer_costs, stage_speeds, *, min_layers=1):
             # stage s takes layers [i, j): i ranges so every earlier stage
             # keeps >= min_layers and this one too
             for i in range(s * min_layers, j - min_layers + 1):
-                if dp[s - 1][i] is INF:
+                prev = dp[s - 1][i]
+                # unreachable prefix (min_layers infeasibility). Value check,
+                # not `prev is INF`: float identity silently misses equal
+                # infinities produced by arithmetic. An inf *cost* with a
+                # valid cut is reachable — extreme speed skew can overflow
+                # seg() yet the partition itself is still legal.
+                if math.isinf(prev) and cut[s - 1][i] < 0:
                     continue
-                v = max(dp[s - 1][i], seg(i, j, s))
-                if v < best:
+                v = max(prev, seg(i, j, s))
+                if arg < 0 or v < best:
                     best, arg = v, i
             dp[s][j], cut[s][j] = best, arg
 

@@ -27,7 +27,8 @@ from typing import Optional
 
 from repro.core.scheduler.plan import ParallelPlan, ReplicaPlan, StagePlan
 from repro.core.scheduler.repartition import repartition_layers
-from repro.core.scheduler.tp_reconfig import TPReconfig, reconfigure_tp_group
+from repro.core.scheduler.tp_reconfig import (NTPConfig, TPReconfig,
+                                              reconfigure_tp_group)
 
 
 @dataclass
@@ -117,28 +118,48 @@ class Scheduler:
     # loop stays syscall-free and plan-cache hits are truly free.
     measure_overhead: bool = True
     # plan cache: ``adapt`` is a pure function of (plan, speeds, failed,
-    # quarantined, risk), so repeated reconfigurations under flapping /
+    # quarantined, risk, ntp mode), so repeated reconfigurations under flapping /
     # poisson storms that revisit a failure signature skip the O(S·n²)
     # repartition DP + TP search. 0 disables. Cached AdaptationPlans are
     # shared — treat them as read-only (every in-repo consumer does).
     plan_cache_size: int = 256
+    # healthy-baseline TP degree used to normalize per-stage effective
+    # speeds. None => derived from the incoming plan's widest group — correct
+    # only while that plan still contains a healthy-width group, which is why
+    # ResiHPPolicy pins it from plan0 (adapting an already-shrunk plan must
+    # not inflate the surviving stages' speeds).
+    baseline_tp: Optional[int] = None
+    # physical topology view for the §6.1 node-local-standby contract: a
+    # callable (device -> node) or an indexable per-device node array
+    # (ClusterState.node_of). None => plan-only callers keep the whole-pool
+    # legacy behaviour (no topology to filter by).
+    node_of: Optional[object] = None
+    # nonuniform-TP adaptation axis (NTPConfig; ``True`` for defaults;
+    # default OFF = exclusion-only Eq. 3/4, byte-identical legacy planning)
+    ntp: Optional[object] = None
     _cache: dict = field(default_factory=dict, init=False, repr=False,
                          compare=False)
 
-    @staticmethod
-    def _signature(speeds: dict, failed, quarantined, device_risk):
+    def __post_init__(self):
+        if self.ntp is True:
+            self.ntp = NTPConfig()
+
+    def _signature(self, speeds: dict, failed, quarantined, device_risk):
         """Frozen (failed, quarantined, risk-bucketed speeds) cache key.
         Healthy (1.0) speeds are elided so the signature scales with the
         failure count, not the fleet; risk scores are bucketed at 1e-6 —
         fine enough that a tie-break could only flip between devices whose
-        estimated hazards are practically indistinguishable."""
+        estimated hazards are practically indistinguishable. The NTP config
+        is part of the key: the same failure set yields a different plan
+        under shrink-shard than under exclusion, and a cached exclusion plan
+        must not alias an NTP request (or vice versa)."""
         sig_speeds = tuple(sorted(
             (d, v) for d, v in speeds.items() if v != 1.0))
         sig_risk = (tuple(sorted((d, round(r, 6))
                                  for d, r in device_risk.items()))
                     if device_risk else None)
         return (sig_speeds, frozenset(failed), frozenset(quarantined),
-                sig_risk)
+                sig_risk, self.ntp)
 
     # ------------------------------------------------------------ adaptation
     def adapt(self, plan: ParallelPlan, speeds: dict, *,
@@ -193,7 +214,11 @@ class Scheduler:
         for r, rep in enumerate(plan.replicas):
             stages = []
             for s, st in enumerate(rep.stages):
-                affected = any(d in failed or speeds.get(d, 1.0) < 1.0 for d in st.devices)
+                # a stage already running nonuniform widths is always
+                # re-planned: if its straggler recovered, the widths should
+                # revert to uniform (exclusion wins ties at full health)
+                affected = st.shard_fractions is not None or any(
+                    d in failed or speeds.get(d, 1.0) < 1.0 for d in st.devices)
                 if not affected:
                     stages.append(st)
                     group_speed[(r, s)] = 1.0 * st.tp
@@ -205,25 +230,37 @@ class Scheduler:
                     group_speed[(r, s)] = 0.0
                     notes.append(f"stage (dp{r},pp{s}) dead: whole-group exclusion")
                     continue
-                # pull node-local standbys into the candidate pool (§6.1)
-                pool = list(st.devices) + standby_pool
+                # pull node-local standbys into the candidate pool (§6.1 —
+                # only standbys co-located with the group's node(s) qualify)
+                offered = self._local_standbys(st.devices, standby_pool)
+                pool = list(st.devices) + offered
                 rec: TPReconfig = reconfigure_tp_group(
                     pool, speeds, k_min=self.k_min, failed=failed,
-                    risk=device_risk)
+                    risk=device_risk, ntp=self.ntp)
                 if rec.tp == 0:
                     dead.append((r, s))
                     stages.append(StagePlan((), st.layers))
                     group_speed[(r, s)] = 0.0
                     notes.append(f"stage (dp{r},pp{s}) dead: no feasible TP subgroup")
                     continue
-                # consumed standbys leave the pool; freed devices join it
-                standby_pool = [d for d in rec.standby if d not in st.devices] + [
-                    d for d in rec.standby if d in st.devices
-                ]
+                # consumed standbys leave the pool; freed devices join it;
+                # standbys never offered (other nodes) keep their place
+                standby_pool = (
+                    [d for d in standby_pool if d not in pool]
+                    + [d for d in rec.standby if d not in st.devices]
+                    + [d for d in rec.standby if d in st.devices]
+                )
                 standby_pool = list(dict.fromkeys(standby_pool))
-                stages.append(StagePlan(rec.devices, st.layers))
+                stages.append(StagePlan(rec.devices, st.layers,
+                                        rec.shard_fractions))
                 group_speed[(r, s)] = rec.effective_throughput
-                if rec.tp != st.tp:
+                if rec.mode == "shrink":
+                    widths = "/".join(f"{f:.2f}" for f in rec.shard_fractions)
+                    notes.append(
+                        f"stage (dp{r},pp{s}) NTP shrink-shard tp={rec.tp} "
+                        f"widths=[{widths}] thru={rec.effective_throughput:.2f}"
+                    )
+                elif rec.tp != st.tp:
                     notes.append(
                         f"stage (dp{r},pp{s}) TP {st.tp}->{rec.tp} "
                         f"thru={rec.effective_throughput:.2f}"
@@ -232,7 +269,13 @@ class Scheduler:
 
         # ---- 2. PP: uniform layer repartition ---------------------------
         pp = plan.replicas[0].pp
-        tp0 = max(st.tp for st in plan.replicas[0].stages)
+        # normalize against the *healthy* baseline TP, not the incoming
+        # plan's current widths: when adapting an already-shrunk plan the
+        # incoming max degree understates healthy capacity and would inflate
+        # every surviving stage's effective speed. The fallback scans all
+        # replicas for the widest (least-degraded) group.
+        tp0 = self.baseline_tp or max(
+            st.tp for rep in plan.replicas for st in rep.stages) or 1
         # per-stage effective speed normalized to the healthy group = min
         # across live replicas (the DP sync is gated by the slowest replica)
         stage_speed = []
@@ -252,7 +295,7 @@ class Scheduler:
             if self._worth_it(old_layers, new_parts, stage_speed, notes):
                 new_replicas = [
                     ReplicaPlan(tuple(
-                        StagePlan(st.devices, new_parts[s])
+                        StagePlan(st.devices, new_parts[s], st.shard_fractions)
                         for s, st in enumerate(rep.stages)
                     ))
                     for rep in new_replicas
@@ -278,6 +321,19 @@ class Scheduler:
                              if self.measure_overhead else 0.0),
             notes=notes,
         )
+
+    def _node(self, device) -> int:
+        nf = self.node_of
+        return int(nf(device)) if callable(nf) else int(nf[device])
+
+    def _local_standbys(self, group, standby_pool) -> list:
+        """§6.1 node-local standby contract: a group may only pull in
+        standbys co-located with its node(s). Without a topology view
+        (node_of=None, plan-only callers) the whole pool qualifies."""
+        if self.node_of is None or not standby_pool:
+            return list(standby_pool)
+        nodes = {self._node(d) for d in group}
+        return [d for d in standby_pool if self._node(d) in nodes]
 
     def _worth_it(self, old_parts, new_parts, stage_speed, notes) -> bool:
         from repro.core.scheduler.repartition import partition_bottleneck

@@ -1,10 +1,12 @@
 """Engine parity: the fast execution core (``engine="fast"``, the default)
 must reproduce the reference python engine bit-for-bit.
 
-Runs named scenarios through both engines under three policies that between
+Runs named scenarios through both engines under four policies that between
 them exercise every execution path: ``resihp`` (joint migrating pipeline,
-Algorithm 1), ``recycle+`` (round-robin fail-stop eviction + redistributed
-micro-batches) and ``oobleck+`` (heterogeneous per-replica pipelines via
+Algorithm 1), ``resihp+ntp`` (nonuniform TP shard widths — the
+``StageSpeedCache`` fraction-aware reduction vs the reference python loop),
+``recycle+`` (round-robin fail-stop eviction + redistributed micro-batches)
+and ``oobleck+`` (heterogeneous per-replica pipelines via
 ``_run_independent``). The streams are compared exactly — floats included —
 because the fast engine's contract is identity, not approximation.
 
@@ -25,16 +27,21 @@ SCENARIOS = {
     "fig10_mixed": dict(span=20.0),
     "flapping_stragglers": dict(span=25.0),
     "slow_ramp_mix": dict(span=25.0),
+    # short span so the mild throttles are detected within the 40-iter run
+    # and the NTP policy actually executes nonuniform-width plans
+    "thermal_throttle_fleet": dict(span=3.0, frac=0.5),
 }
 POLICIES = {
     "resihp": {"plan_overhead_fixed": 0.25},
+    "resihp+ntp": {"plan_overhead_fixed": 0.25, "ntp": True},
     "recycle+": {},
     "oobleck+": {},
 }
 
 
 def _run(engine, scenario, policy):
-    sim = TrainingSim(policy, CFG, policy_kwargs=POLICIES[policy],
+    name = policy.split("+ntp")[0] if policy.endswith("+ntp") else policy
+    sim = TrainingSim(name, CFG, policy_kwargs=POLICIES[policy],
                       engine=engine)
     sim.apply_scenario(scenarios.get(scenario, **SCENARIOS[scenario]))
     sim.run(ITERS, stop_on_abort=False)

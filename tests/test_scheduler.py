@@ -292,3 +292,133 @@ def test_resihp_policy_wires_measure_overhead():
     assert not fixed.scheduler.measure_overhead
     modeled = ResiHPPolicy(plan, [1.0] * 8, plan_overhead_model=True)
     assert not modeled.scheduler.measure_overhead
+
+
+# --------------------------------------------------- bugfix-batch regressions
+def test_missing_speed_defaults_to_healthy():
+    """A device absent from `speeds` must be treated as healthy (p=1.0), the
+    default the ranking/throughput paths always used — not as failed (the
+    0.0 default the exclusion-set build used to apply)."""
+    rec = reconfigure_tp_group([0, 1, 2, 3], {1: 0.5})
+    assert rec.excluded == ()  # nobody treated as dead
+    # Eq. 4 over {1.0, 0.5, 1.0, 1.0}: k=2 healthy pair (2.0) ties k=4
+    # (4*0.5) and the smaller k wins the tie
+    assert rec.tp == 2 and rec.effective_throughput == pytest.approx(2.0)
+    assert 1 not in rec.devices
+    # an empty dict now means an all-healthy group, not an all-dead one
+    rec = reconfigure_tp_group([0, 1, 2, 3], {})
+    assert rec.tp == 4 and rec.effective_throughput == pytest.approx(4.0)
+
+
+def test_two_step_adaptation_keeps_healthy_baseline_normalization():
+    """Adapting an already-shrunk plan must not inflate surviving stages'
+    effective speeds: normalization uses the healthy baseline TP, not the
+    incoming plan's (possibly degraded) max degree."""
+    plan0 = initial_plan(8, dp=1, pp=2, tp=4)
+    sch = Scheduler(layer_costs=[1.0] * 8, baseline_tp=4)
+    speeds = {d: 1.0 for d in plan0.devices}
+    speeds[1] = speeds[3] = 0.0  # stage 0 loses two ranks
+    speeds[5] = 0.0  # stage 1 loses one
+    step1 = sch.adapt(plan0, speeds, failed={1, 3, 5})
+    assert all(st.tp == 2 for st in step1.plan.replicas[0].stages)
+    # both stages now run 2 of 4 original ranks = 0.5 of healthy
+    assert step1.stage_speeds == {(0, 0): 0.5, (0, 1): 0.5}
+    # second failure wave against the *adapted* plan: the surviving stage is
+    # still at half capacity (tp0=4), not "full speed" (the tp0=2 bug)
+    speeds2 = {d: 1.0 for d in step1.plan.devices}
+    step2 = sch.adapt(step1.plan, speeds2)
+    assert step2.stage_speeds[(0, 0)] == pytest.approx(0.5)
+    assert step2.stage_speeds[(0, 1)] == pytest.approx(0.5)
+
+
+def test_resihp_policy_pins_baseline_tp_from_plan0():
+    from repro.cluster.baselines import ResiHPPolicy
+
+    plan = initial_plan(8, dp=1, pp=2, tp=4)
+    pol = ResiHPPolicy(plan, [1.0] * 8)
+    assert pol.scheduler.baseline_tp == 4
+
+
+def test_standby_pull_in_is_node_local():
+    """§6.1 contract: a TP group may only pull in standbys co-located with
+    its node. A cross-node standby stays in the pool even when the group
+    loses a member."""
+    plan = initial_plan(8, dp=1, pp=2, tp=4).replace(standby=(8,))
+    node_of = lambda d: d // 8  # devices 0-7 on node 0, standby 8 on node 1
+    speeds = {d: 1.0 for d in range(9)}
+    speeds[1] = 0.0  # stage-0 group loses a member
+    topo_aware = Scheduler(layer_costs=[1.0] * 8, node_of=node_of)
+    ad = topo_aware.adapt(plan, speeds, failed={1})
+    assert 8 not in ad.plan.replicas[0].stages[0].devices
+    assert 8 in ad.plan.standby  # unreachable standby kept, not consumed
+    assert ad.plan.replicas[0].stages[0].tp == 2
+    # without a topology view (plan-only callers) the whole pool is offered
+    legacy = Scheduler(layer_costs=[1.0] * 8)
+    ad2 = legacy.adapt(plan, speeds, failed={1})
+    assert 8 in ad2.plan.replicas[0].stages[0].devices
+
+
+def test_node_local_standby_is_consumed_on_same_node():
+    plan = initial_plan(8, dp=1, pp=2, tp=4).replace(standby=(8,))
+    node_of = lambda d: 0  # everything co-located
+    speeds = {d: 1.0 for d in range(9)}
+    speeds[1] = 0.0
+    sch = Scheduler(layer_costs=[1.0] * 8, node_of=node_of)
+    ad = sch.adapt(plan, speeds, failed={1})
+    assert 8 in ad.plan.replicas[0].stages[0].devices
+    assert ad.plan.replicas[0].stages[0].tp == 4
+
+
+def test_training_sim_wires_node_of_into_scheduler():
+    from repro.cluster.simulator import SimConfig, TrainingSim
+
+    cfg = SimConfig(dp=2, pp=2, tp=2, n_layers=8, n_microbatches=4,
+                    devices_per_node=4, seed=0)
+    sim = TrainingSim("resihp", cfg)
+    assert sim.policy.scheduler.node_of == sim.topo.node_of
+
+
+def test_repartition_exact_fit_extreme_skew():
+    """n == S * min_layers leaves exactly one feasible partition; extreme
+    (but finite) speed skew must still return it."""
+    parts = repartition_layers([1.0] * 3, [1e-9, 1.0, 1e-9], min_layers=1)
+    assert parts == [(0,), (1,), (2,)]
+    parts = repartition_layers([1.0] * 6, [1e-12, 1.0, 1.0], min_layers=2)
+    assert parts == [(0, 1), (2, 3), (4, 5)]
+
+
+def test_repartition_survives_overflow_to_inf():
+    """Denormal speeds overflow seg() to inf: a reachable-but-infinite-cost
+    prefix must not be confused with an unreachable one (the old float
+    -identity check crashed on the backtrack here)."""
+    parts = repartition_layers([1.0] * 3, [5e-324, 1.0, 5e-324], min_layers=1)
+    assert parts == [(0,), (1,), (2,)]
+    # mixed: some partitions overflow, the finite one must win
+    parts = repartition_layers([1.0] * 4, [5e-324, 1.0], min_layers=1)
+    assert [i for p in parts for i in p] == list(range(4))
+    assert len(parts[0]) == 1  # the overflowing stage takes as little as legal
+
+
+# --------------------------------------------- backfill_from_standby coverage
+def test_backfill_noop_without_standby():
+    rec = reconfigure_tp_group([0, 1, 2, 3], {d: 1.0 for d in range(4)})
+    assert rec.standby == ()
+    again = backfill_from_standby(rec, {d: 1.0 for d in range(4)})
+    assert again.devices == rec.devices
+    assert again.effective_throughput == rec.effective_throughput
+
+
+def test_backfill_respects_k_min():
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.0, 2: 1.0, 3: 1.0})
+    sp = {0: 1.0, 1: 0.0, 2: 0.0, 3: 0.0}  # everything else dies
+    rec2 = backfill_from_standby(rec, sp, k_min=2)
+    assert rec2.tp == 0  # one survivor < k_min: dead stage, not a tp-1 group
+
+
+def test_backfill_prefers_low_risk_on_ties():
+    rec = reconfigure_tp_group([0, 1, 2, 3], {0: 1.0, 1: 0.0, 2: 1.0, 3: 1.0})
+    standby = rec.standby[0]
+    sp = {d: (0.0 if d == 2 else 1.0) for d in range(4)}
+    # risk breaks the equal-speed tie: the standby is the safe pick
+    risky = backfill_from_standby(rec, sp, risk={0: 9.0, standby: 0.1, 3: 5.0})
+    assert standby in risky.devices
