@@ -55,6 +55,13 @@ SWEEP = {
     "lemon_devices": lambda span: scenarios.get("lemon_devices", span=span),
     "infant_mortality": lambda span: scenarios.get(
         "infant_mortality", span=span),
+    # mined adversarial family (tools/mine_scenarios.py): the worst found
+    # cases become permanent sweep rows so policy changes can't silently
+    # regress on them (timelines rescale to the cell's span and remap to
+    # the cell's topology — see AdversarialScenario)
+    "adversarial_1": lambda span: scenarios.get("adversarial_1", span=span),
+    "adversarial_2": lambda span: scenarios.get("adversarial_2", span=span),
+    "adversarial_3": lambda span: scenarios.get("adversarial_3", span=span),
 }
 
 # policy label -> (policy name, policy kwargs); the lifecycle/hazard runs are

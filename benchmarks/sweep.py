@@ -75,6 +75,23 @@ def run_cell(cell: Cell, engine: str = "fast", full: bool = False) -> dict:
                                engine=engine, full=full)
 
 
+def pmap(fn, items, *, workers: int = 0, fn_args: tuple = ()) -> list:
+    """Order-preserving parallel map over pure, picklable jobs.
+
+    ``workers <= 1`` is the in-process serial reference; otherwise a process
+    pool runs the calls concurrently and results come back in input order,
+    so a deterministic ``fn`` makes the output worker-count invariant. Both
+    the scenario sweep below and the adversarial miner
+    (``tools/mine_scenarios.py`` -> :func:`repro.cluster.mining.mine`) fan
+    out through this."""
+    items = list(items)
+    if workers <= 1:
+        return [fn(x, *fn_args) for x in items]
+    with ProcessPoolExecutor(max_workers=workers) as ex:
+        futures = [ex.submit(fn, x, *fn_args) for x in items]
+    return [f.result() for f in futures]
+
+
 def _cell_key(cell: Cell, multi_seed: bool) -> str:
     base = f"{cell.model}/{cell.scenario}"
     return f"{base}/s{cell.seed}" if multi_seed else base
@@ -86,13 +103,9 @@ def sweep(cells, *, workers: int = 0, engine: str = "fast",
     ``workers <= 1`` runs in-process (the reference serial path); otherwise a
     process pool executes cells concurrently and the merge reassembles them
     in canonical grid order, byte-identical to serial."""
-    if workers <= 1:
-        results = {cell: run_cell(cell, engine, full) for cell in cells}
-    else:
-        with ProcessPoolExecutor(max_workers=workers) as ex:
-            futures = {cell: ex.submit(run_cell, cell, engine, full)
-                       for cell in cells}
-        results = {cell: fut.result() for cell, fut in futures.items()}
+    cells = list(cells)
+    results = dict(zip(cells, pmap(run_cell, cells, workers=workers,
+                                   fn_args=(engine, full))))
     multi_seed = len({c.seed for c in cells}) > 1
     out: dict = {}
     for cell in cells:

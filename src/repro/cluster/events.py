@@ -24,6 +24,7 @@ Event kinds
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
@@ -36,6 +37,15 @@ KINDS = (
     "rejoin",
     "callback",
 )
+
+DEVICE_KINDS = ("fail-stop", "fail-slow", "rejoin")
+NODE_KINDS = ("fail-stop-node", "net-degrade", "net-restore")
+
+
+class TraceValidationError(ValueError):
+    """An event timeline is contradictory or out of range for its topology
+    (see :meth:`EventTrace.validate`). Raised instead of letting the
+    simulator silently mis-simulate an impossible sequence."""
 
 
 @dataclass(frozen=True, order=True)
@@ -111,6 +121,98 @@ class EventTrace:
 
     def merge(self, other: "EventTrace") -> "EventTrace":
         return EventTrace([*self.events, *other.events])
+
+    def validate(self, topo) -> "EventTrace":
+        """Reject timelines the simulator would silently mis-simulate.
+
+        Checks, per event in time order (``callback`` events are opaque and
+        skipped):
+
+        * finite, non-negative times and finite values;
+        * device targets in ``[0, n_devices)`` for device-kind events and
+          node targets in ``[0, n_nodes)`` for node-kind events;
+        * value ranges: fail-slow severity in ``(0, 1]``, rejoin return
+          speed encoding in ``[0, 1)`` (see :func:`encode_rejoin_speed`),
+          net-degrade link scale in ``(0, 1]``;
+        * a consistent per-device lifecycle: no fail-stop/fail-slow of an
+          already-dead device (a double kill means two generators disagree
+          about who owns the victim), no ``rejoin`` of a device that never
+          failed, no ``fail-stop-node`` of a node whose devices are all
+          already dead, no ``net-restore`` without an active degrade.
+
+        Returns ``self`` so calls chain; raises
+        :class:`TraceValidationError` naming the offending event otherwise.
+        Every catalog scenario compiles clean under this check
+        (``tests/test_scenarios.py`` pins it); the adversarial miner's
+        mutation operators route every candidate through
+        :func:`repro.cluster.mining.repair_timeline`, which canonicalizes
+        arbitrary event soups into timelines that pass."""
+        n_dev, n_nodes = topo.n_devices, topo.n_nodes
+
+        def err(i, ev, msg):
+            raise TraceValidationError(
+                f"event {i} (t={ev.t}, kind={ev.kind!r}, target={ev.target}, "
+                f"value={ev.value}): {msg}")
+
+        alive: dict = {}       # device -> liveness (default True)
+        degraded: set = set()  # devices currently running below peak
+        net_down: set = set()  # nodes with an active link degrade
+        for i, ev in enumerate(self.events):
+            if ev.kind == "callback":
+                continue
+            if not math.isfinite(ev.t) or ev.t < 0.0:
+                err(i, ev, "event time must be finite and >= 0")
+            if not math.isfinite(ev.value):
+                err(i, ev, "event value must be finite")
+            if ev.kind in DEVICE_KINDS and not 0 <= ev.target < n_dev:
+                err(i, ev, f"device id out of range for a {n_dev}-device "
+                           "topology")
+            if ev.kind in NODE_KINDS and not 0 <= ev.target < n_nodes:
+                err(i, ev, f"node id out of range for a {n_nodes}-node "
+                           "topology")
+            if ev.kind == "fail-stop":
+                if not alive.get(ev.target, True):
+                    err(i, ev, "device is already dead (double fail-stop "
+                               "without an intervening rejoin)")
+                alive[ev.target] = False
+            elif ev.kind == "fail-stop-node":
+                devs = range(ev.target * topo.devices_per_node,
+                             (ev.target + 1) * topo.devices_per_node)
+                if all(not alive.get(d, True) for d in devs):
+                    err(i, ev, "every device on the node is already dead")
+                for d in devs:
+                    alive[d] = False
+            elif ev.kind == "fail-slow":
+                if not 0.0 < ev.value <= 1.0:
+                    err(i, ev, "fail-slow severity must be in (0, 1] "
+                               "(remaining fraction of peak speed)")
+                if not alive.get(ev.target, True):
+                    err(i, ev, "fail-slow on a dead device (it has no speed "
+                               "to degrade; rejoin it first)")
+                degraded.add(ev.target)
+            elif ev.kind == "rejoin":
+                if not 0.0 <= ev.value < 1.0:
+                    err(i, ev, "rejoin value must be the encode_rejoin_speed "
+                               "encoding: 0.0 = full health, (0, 1) = "
+                               "degraded return")
+                if alive.get(ev.target, True) and ev.target not in degraded:
+                    err(i, ev, "rejoin before any failure of the device "
+                               "(nothing to repair or recover from)")
+                alive[ev.target] = True
+                degraded.discard(ev.target)
+                if 0.0 < ev.value < 1.0:
+                    degraded.add(ev.target)  # returned below peak
+            elif ev.kind == "net-degrade":
+                if not 0.0 < ev.value <= 1.0:
+                    err(i, ev, "net-degrade link scale must be in (0, 1] "
+                               "(remaining fraction of bandwidth)")
+                net_down.add(ev.target)
+            elif ev.kind == "net-restore":
+                if ev.target not in net_down:
+                    err(i, ev, "net-restore without an active net-degrade "
+                               "on the node")
+                net_down.discard(ev.target)  # restore clears all contention
+        return self
 
     def as_tuples(self) -> list:
         return [ev.as_tuple() for ev in self.events]

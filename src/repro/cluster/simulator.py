@@ -324,9 +324,16 @@ class TrainingSim:
         return out
 
     # ------------------------------------------------------------ schedule
-    def apply_scenario(self, scenario, *, seed: Optional[int] = None):
+    def apply_scenario(self, scenario, *, seed: Optional[int] = None,
+                       validate: bool = True):
         """Compile a FailureScenario (or registry name) against this sim's
-        topology and enqueue its event timeline. Returns the compiled trace."""
+        topology and enqueue its event timeline. Returns the compiled trace.
+
+        ``validate`` (default on) rejects contradictory timelines — rejoins
+        of never-failed devices, events on out-of-range ids, double kills —
+        with a :class:`~repro.cluster.events.TraceValidationError` instead
+        of silently mis-simulating them; pass ``validate=False`` to replay
+        a deliberately malformed trace."""
         from repro.cluster.scenarios import FailureScenario, get as get_scenario
 
         if isinstance(scenario, str):
@@ -334,6 +341,8 @@ class TrainingSim:
         assert isinstance(scenario, FailureScenario), scenario
         trace = scenario.compile(
             self.topo, self.cfg.seed if seed is None else seed)
+        if validate:
+            trace.validate(self.topo)
         for ev in trace:
             self._push_event(ev)
         return trace

@@ -1,0 +1,103 @@
+"""Golden regression pins for the mined adversarial_* scenario family.
+
+The top-3 mined worst cases (see ``tools/mine_scenarios.py`` and
+``results/adversarial_mined.json``) become permanent tier-1 guardrails:
+per-policy session throughput at the 256-device mining scale, fixed seed,
+pinned exactly — the same mechanism as ``test_simulator_golden.py``. A
+policy or engine change that regresses (or silently "improves") behavior on
+the worst found failure patterns shows up as a diff here.
+
+Regenerate (after an *intentional* behavior change) with:
+
+    PYTHONPATH=src:tests python -c "import test_adversarial_golden as g; g.regenerate()"
+
+and re-run ``python tools/mine_scenarios.py --quick`` so the artifact keeps
+matching (tests/test_mining.py pins the two against each other).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.cluster import mining, scenarios
+from repro.cluster.simulator import TrainingSim
+
+GOLDEN_PATH = Path(__file__).parent / "golden" / "adversarial_golden.json"
+ARTIFACT = Path(__file__).parent.parent / "results" / "adversarial_mined.json"
+
+NAMES = ("adversarial_1", "adversarial_2", "adversarial_3")
+ITERS = 30  # the mining recipe's session length
+
+
+def _run(name: str) -> dict:
+    cfg = mining.mining_config()
+    out = {}
+    for label in sorted(mining.POLICIES):
+        policy, policy_kw = mining.POLICIES[label]
+        sim = TrainingSim(policy, cfg, engine="fast", policy_kwargs=policy_kw)
+        sim.apply_scenario(scenarios.get(name))
+        sim.run(ITERS, stop_on_abort=False)
+        out[label] = {
+            "session_throughput": sim.session_throughput(skip=2),
+            "avg_throughput": sim.avg_throughput(skip=2),
+            "aborted": sim.aborted,
+            "n_fired": len(sim.event_log),
+        }
+    return out
+
+
+def _observed() -> dict:
+    return {name: _run(name) for name in NAMES}
+
+
+def regenerate():
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN_PATH.write_text(json.dumps(_observed(), indent=1))
+    print(f"wrote {GOLDEN_PATH}")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert GOLDEN_PATH.exists(), "golden missing - run regenerate()"
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+@pytest.fixture(scope="module")
+def observed():
+    return json.loads(json.dumps(_observed()))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_per_policy_session_throughput_matches_golden(name, golden, observed):
+    for label, pinned in golden[name].items():
+        got = observed[name][label]
+        assert got["aborted"] == pinned["aborted"], (name, label)
+        assert got["n_fired"] == pinned["n_fired"], (name, label)
+        assert got["session_throughput"] == pytest.approx(
+            pinned["session_throughput"], rel=1e-9), (name, label)
+        assert got["avg_throughput"] == pytest.approx(
+            pinned["avg_throughput"], rel=1e-9), (name, label)
+
+
+def test_golden_agrees_with_mined_artifact(golden):
+    """The golden pins and results/adversarial_mined.json describe the same
+    runs: the artifact's recorded per-policy sessions match the pins."""
+    report = json.loads(ARTIFACT.read_text())
+    assert report["config"]["iters"] == ITERS
+    for entry in report["family"]:
+        name = f"adversarial_{entry['rank']}"
+        for label, sess in entry["session_throughput"].items():
+            assert golden[name][label]["session_throughput"] == pytest.approx(
+                sess, rel=1e-9), (name, label)
+
+
+def test_family_worst_case_beats_hand_authored_catalog(golden):
+    """The acceptance bar, pinned: at the mining scale at least one mined
+    scenario degrades resihp session throughput below every hand-authored
+    catalog scenario's worst (recorded in the artifact's catalog table)."""
+    report = json.loads(ARTIFACT.read_text())
+    worst_catalog = min(
+        c["session_throughput"]["resihp"] for c in report["catalog"].values())
+    worst_mined = min(
+        golden[n]["resihp"]["session_throughput"] for n in NAMES)
+    assert worst_mined < worst_catalog

@@ -1,0 +1,269 @@
+"""Adversarial scenario miner: property-based fuzz over the mutation /
+composition operators, repair canonicalization, mining determinism and
+worker-count invariance, and the checked-in mined-family contract.
+
+The fuzz pass doubles as the continuous fuzz harness for the scenario /
+event / engine stack: every mutated timeline is an engine input nobody
+hand-wrote, and each one must compile to a valid ``EventTrace``, replay
+deterministically, and execute with bit-for-bit fast/python engine parity.
+"""
+import json
+from functools import partial
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from _ht import given, settings, strategies as st
+from benchmarks.sweep import pmap
+from repro.cluster import mining, scenarios
+from repro.cluster.events import Event, EventTrace
+from repro.cluster.registry import ClusterTopology
+from repro.cluster.simulator import SimConfig, TrainingSim
+
+TOPO = ClusterTopology(4, 4)  # 16 devices: the fuzz scale
+SPAN = 10.0
+MAX_EVENTS = 48
+
+# the catalog pool the mutators splice/compose from, compiled once
+SEED_TLS = mining.compile_seed_timelines(TOPO, SPAN, seed=0)
+POOL = [SEED_TLS[name] for name in sorted(SEED_TLS)]
+CAP = max(mining.damage(tl, TOPO) for tl in POOL)
+
+TINY = SimConfig(dp=2, pp=2, tp=2, n_layers=8, n_microbatches=4,
+                 seq_len=2048, noise=0.01, seed=0)
+
+ARTIFACT = Path(__file__).parent.parent / "results" / "adversarial_mined.json"
+
+
+def _mutant(seed: int) -> tuple:
+    """One deterministic fuzz candidate: a mutated/composed catalog timeline."""
+    rng = np.random.default_rng([0xAD5E, seed])
+    parent = POOL[int(rng.integers(0, len(POOL)))]
+    return mining.mutate(parent, rng, TOPO, SPAN, POOL,
+                         max_events=MAX_EVENTS, cap=CAP)
+
+
+def _trace(timeline) -> EventTrace:
+    return EventTrace(Event(t, kind, target, value, "mined")
+                      for t, kind, target, value in timeline)
+
+
+# ------------------------------------------------------ property-based fuzz
+@settings(max_examples=200)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_mutants_compile_to_valid_traces(seed):
+    """Any mutated/composed candidate is a valid EventTrace within the
+    miner's event-count and damage budgets."""
+    child = _mutant(seed)
+    _trace(child).validate(TOPO)
+    assert len(child) <= MAX_EVENTS
+    assert mining.damage(child, TOPO) <= CAP + 1e-6
+    for t, kind, target, value in child:
+        assert 0.0 <= t <= SPAN
+
+
+@settings(max_examples=50)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_mutation_is_deterministic(seed):
+    """Same rng seed => byte-identical mutant, and its trace serializes
+    canonically."""
+    a, b = _mutant(seed), _mutant(seed)
+    assert a == b
+    assert _trace(a).to_json() == _trace(b).to_json()
+
+
+@settings(max_examples=50)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_repair_is_idempotent_on_raw_soup(seed):
+    """repair_timeline canonicalizes arbitrary event soups — including
+    out-of-range targets, negative times and contradictory sequences — into
+    valid timelines, and is a fixed point on its own output."""
+    rng = np.random.default_rng([0x50FA, seed])
+    kinds = ("fail-stop", "fail-stop-node", "fail-slow", "net-degrade",
+             "net-restore", "rejoin")
+    soup = [(float(rng.uniform(-2.0, SPAN + 5.0)),
+             kinds[int(rng.integers(0, len(kinds)))],
+             int(rng.integers(-5, 3 * TOPO.n_devices)),
+             float(rng.uniform(-0.5, 1.5)))
+            for _ in range(int(rng.integers(0, 40)))]
+    repaired = mining.repair_timeline(soup, TOPO, SPAN,
+                                      max_events=MAX_EVENTS, cap=CAP)
+    _trace(repaired).validate(TOPO)
+    again = mining.repair_timeline(repaired, TOPO, SPAN,
+                                   max_events=MAX_EVENTS, cap=CAP)
+    assert again == repaired
+
+
+@settings(max_examples=4)
+@given(st.integers(0, 2**31 - 1))
+def test_fuzz_mutants_run_with_engine_parity(seed):
+    """Mutated timelines execute bit-for-bit identically on the fast and
+    python engines (nobody hand-checked these inputs — that's the point).
+
+    The candidate must be repaired against the *simulator's* topology —
+    an earlier version of this test repaired at a 2x4 topology while the
+    sim ran 1x8, and apply_scenario's validation rejected the mismatch
+    (a node-kill covers different devices), which is exactly the loud
+    failure the hardening satellite is for."""
+    topo8 = mining.mining_topology(TINY)  # 1 node x 8 devices
+    rng = np.random.default_rng([0x9A41, seed])
+    pool8 = [mining.repair_timeline(tl, topo8, 1.0) for tl in POOL]
+    child = mining.mutate(pool8[int(rng.integers(0, len(pool8)))],
+                          rng, topo8, 1.0, pool8, max_events=24)
+    streams = {}
+    for engine in ("python", "fast"):
+        sim = TrainingSim("resihp", TINY, engine=engine,
+                          policy_kwargs={"plan_overhead_fixed": 0.25})
+        sim.apply_scenario(scenarios.TimelineScenario(
+            span=1.0, timeline=child, permute=False, label="mined"))
+        sim.run(12, stop_on_abort=False)
+        streams[engine] = [(r.iteration, r.t_start, r.duration, r.throughput)
+                           for r in sim.trace]
+    assert streams["python"] == streams["fast"]
+
+
+# ------------------------------------------- named shrunk regression cases
+# Minimal raw timelines distilled from fuzz findings during development:
+# each is the smallest soup exercising one repair rule the mutators can
+# violate. name -> (raw soup, expected repaired timeline).
+REGRESSION_CASES = {
+    # a rejoin with no prior failure must vanish, not replay
+    "orphan_rejoin": (
+        [(1.0, "rejoin", 3, 0.0)],
+        ()),
+    # second kill of a dead device is dropped; its rejoin still replays
+    "double_fail_stop": (
+        [(1.0, "fail-stop", 2, 0.0), (2.0, "fail-stop", 2, 0.0),
+         (3.0, "rejoin", 2, 0.0)],
+        ((1.0, "fail-stop", 2, 0.0), (3.0, "rejoin", 2, 0.0))),
+    # a dead device has no speed to degrade
+    "fail_slow_on_dead": (
+        [(1.0, "fail-stop", 5, 0.0), (2.0, "fail-slow", 5, 0.5)],
+        ((1.0, "fail-stop", 5, 0.0),)),
+    # net-restore without an active degrade is contradictory
+    "orphan_net_restore": (
+        [(4.0, "net-restore", 1, 0.0)],
+        ()),
+    # killing a node whose devices are all dead is a no-op storm artifact
+    "node_kill_after_all_dead": (
+        [(1.0, "fail-stop", 0, 0.0), (1.0, "fail-stop", 1, 0.0),
+         (1.0, "fail-stop", 2, 0.0), (1.0, "fail-stop", 3, 0.0),
+         (2.0, "fail-stop-node", 0, 0.0)],
+        ((1.0, "fail-stop", 0, 0.0), (1.0, "fail-stop", 1, 0.0),
+         (1.0, "fail-stop", 2, 0.0), (1.0, "fail-stop", 3, 0.0))),
+    # out-of-range victims remap (mod topology) instead of exploding;
+    # negative / past-span times clamp into the window
+    "out_of_range_and_clamped": (
+        [(-3.0, "fail-stop", 18, 0.0), (99.0, "fail-slow", -1, 2.0)],
+        ((0.0, "fail-stop", 2, 0.0), (10.0, "fail-slow", 15, 1.0))),
+    # a degraded-return rejoin leaves the device below peak, so a second
+    # rejoin (full-health) is a recovery, not an orphan
+    "degraded_return_then_full_rejoin": (
+        [(1.0, "fail-stop", 7, 0.0), (2.0, "rejoin", 7, 0.5),
+         (3.0, "rejoin", 7, 0.0)],
+        ((1.0, "fail-stop", 7, 0.0), (2.0, "rejoin", 7, 0.5),
+         (3.0, "rejoin", 7, 0.0))),
+}
+
+
+@pytest.mark.parametrize("name", sorted(REGRESSION_CASES))
+def test_repair_regression_case(name):
+    raw, expected = REGRESSION_CASES[name]
+    repaired = mining.repair_timeline(raw, TOPO, SPAN)
+    assert repaired == expected
+    _trace(repaired).validate(TOPO)
+
+
+# ------------------------------------------------- signature / clustering
+def test_signature_distinguishes_pattern_shape():
+    kill = ((1.0, "fail-stop", 0, 0.0),)
+    storm = tuple((1.0 + 0.1 * i, "fail-stop", i, 0.0) for i in range(8))
+    slow = ((1.0, "fail-slow", 0, 0.5),)
+    sigs = {mining.signature(tl, TOPO, SPAN) for tl in (kill, storm, slow)}
+    assert len(sigs) == 3
+
+
+def test_signature_collapses_near_identical_candidates():
+    a = ((1.0, "fail-stop", 3, 0.0), (2.0, "rejoin", 3, 0.0))
+    b = ((1.1, "fail-stop", 5, 0.0), (2.2, "rejoin", 5, 0.0))
+    assert mining.signature(a, TOPO, SPAN) == mining.signature(b, TOPO, SPAN)
+
+
+# ------------------------------------------------ mine(): determinism
+MINE_KW = dict(seed=0, budget=10, iters=6, cfg=TINY, batch=3, elites=3)
+
+
+@pytest.fixture(scope="module")
+def tiny_report():
+    return mining.mine(**MINE_KW)
+
+
+def test_mine_same_seed_budget_is_byte_identical(tiny_report):
+    again = mining.mine(**MINE_KW)
+    assert mining.to_json(again) == mining.to_json(tiny_report)
+
+
+def test_mine_seed_changes_the_search(tiny_report):
+    other = mining.mine(**{**MINE_KW, "seed": 1})
+    assert mining.to_json(other) != mining.to_json(tiny_report)
+
+
+def test_mine_worker_count_invariance(tiny_report):
+    """Fanning candidate evaluation through the benchmarks/sweep.py process
+    pool must not change a byte of the report."""
+    pooled = mining.mine(**MINE_KW, pool_map=partial(pmap, workers=2))
+    assert mining.to_json(pooled) == mining.to_json(tiny_report)
+
+
+def test_mine_report_shape(tiny_report):
+    assert tiny_report["config"]["budget"] == 10
+    assert tiny_report["worst_catalog"]["name"] in tiny_report["catalog"]
+    for c in tiny_report["clusters"]:
+        assert not c["label"].startswith("seed:")  # survivors are mined
+        _trace([tuple(e) for e in c["timeline"]]).validate(
+            mining.mining_topology(TINY))
+    sigs = [tuple(c["signature"]) for c in tiny_report["clusters"]]
+    assert len(sigs) == len(set(sigs))  # clusters are signature-distinct
+
+
+# ------------------------------------- the checked-in mined-family contract
+@pytest.fixture(scope="module")
+def artifact():
+    assert ARTIFACT.exists(), "run: python tools/mine_scenarios.py --quick"
+    return json.loads(ARTIFACT.read_text())
+
+
+def test_artifact_family_matches_registered_scenarios(artifact):
+    """results/adversarial_mined.json and the adversarial_* registrations in
+    scenarios.py are two views of the same mined timelines."""
+    topo = mining.mining_topology(mining.mining_config())
+    assert len(artifact["family"]) == 3
+    for entry in artifact["family"]:
+        name = f"adversarial_{entry['rank']}"
+        compiled = scenarios.get(name).compile(topo, 0)
+        got = [[ev.t, ev.kind, ev.target, ev.value] for ev in compiled]
+        assert got == entry["timeline"], name
+        compiled.validate(topo)
+
+
+def test_artifact_meets_acceptance_bar(artifact):
+    """>= 3 signature-distinct mined clusters, and at least one family
+    member degrades resihp session throughput more than the worst
+    hand-authored catalog scenario at the same scale."""
+    assert artifact["n_clusters"] >= 3
+    sigs = {tuple(e["signature"]) for e in artifact["family"]}
+    assert len(sigs) == 3
+    worst = artifact["worst_catalog"]["session_throughput"]["resihp"]
+    mined = min(e["session_throughput"]["resihp"]
+                for e in artifact["family"])
+    assert mined < worst
+    assert artifact["config"]["seed"] == 0  # the fixed quick recipe
+
+
+def test_adversarial_scenarios_replay_on_any_topology():
+    """The mined 256-device patterns remap + repair onto small topologies
+    (the engine-parity configs) and still validate."""
+    for name in ("adversarial_1", "adversarial_2", "adversarial_3"):
+        for topo in (ClusterTopology(2, 4), ClusterTopology(8, 8)):
+            scenarios.get(name, span=1.0).compile(topo, 0).validate(topo)

@@ -1,11 +1,12 @@
 """Failure-scenario DSL: deterministic compilation, composition, correlated
-rack locality, registry coverage and the legacy inject_at shim."""
+rack locality, registry coverage, timeline validation hardening and the
+legacy inject_at shim."""
 import json
 
 import pytest
 
 from repro.cluster import scenarios
-from repro.cluster.events import Event, EventTrace
+from repro.cluster.events import Event, EventTrace, TraceValidationError
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.scenarios import (
     Compose,
@@ -54,10 +55,104 @@ def test_registry_names_cover_catalog():
     for required in ("fig9_failslow", "fig10_mixed", "fig11_mixed",
                      "fig14_largescale", "table5_failslow", "table6_failstop",
                      "rack_storm", "rack_storm_256", "flapping_stragglers",
-                     "flap_then_recover", "slow_ramp_mix", "poisson_storm"):
+                     "flap_then_recover", "slow_ramp_mix", "poisson_storm",
+                     "adversarial_1", "adversarial_2", "adversarial_3"):
         assert required in known
     with pytest.raises(KeyError):
         scenarios.get("no_such_scenario")
+
+
+def test_every_catalog_scenario_validates_at_fig14_scale():
+    """The whole registry compiles to contradiction-free timelines at the
+    256-device scale every scenario supports (example_mixed and the mined
+    adversarial family target literal Fig.-14-scale device ids, so 256
+    devices is the topology the full catalog shares)."""
+    topo = ClusterTopology(32, 8)
+    for name in scenarios.names():
+        for seed in (0, 7):
+            scenarios.get(name).compile(topo, seed).validate(topo)
+
+
+# ------------------------------------------------- validation hardening
+def _tr(*rows):
+    return EventTrace(Event(*row) for row in rows)
+
+
+VTOPO = ClusterTopology(2, 4)  # 8 devices / 2 nodes
+
+# name -> (trace rows, message fragment): one case per rejection rule in
+# EventTrace.validate — sequences the adversarial mutator can generate and
+# the simulator would otherwise silently mis-simulate
+REJECTIONS = {
+    "negative_time": ([(-1.0, "fail-stop", 0)], "finite and >= 0"),
+    "nan_time": ([(float("nan"), "fail-stop", 0)], "finite and >= 0"),
+    "inf_value": ([(1.0, "fail-slow", 0, float("inf"))], "must be finite"),
+    "device_id_out_of_range": ([(1.0, "fail-stop", 8)], "device id out of"),
+    "negative_device_id": ([(1.0, "rejoin", -1)], "device id out of"),
+    "node_id_out_of_range": ([(1.0, "fail-stop-node", 2)], "node id out of"),
+    "fail_slow_severity_zero": ([(1.0, "fail-slow", 0, 0.0)], "(0, 1]"),
+    "fail_slow_severity_above_one": ([(1.0, "fail-slow", 0, 1.5)], "(0, 1]"),
+    "rejoin_value_is_full_speed": (
+        [(1.0, "fail-stop", 0), (2.0, "rejoin", 0, 1.0)],
+        "encode_rejoin_speed"),
+    "net_degrade_scale_zero": ([(1.0, "net-degrade", 0, 0.0)], "(0, 1]"),
+    "double_fail_stop": (
+        [(1.0, "fail-stop", 3), (2.0, "fail-stop", 3)], "already dead"),
+    "fail_slow_on_dead_device": (
+        [(1.0, "fail-stop", 3), (2.0, "fail-slow", 3, 0.5)], "dead device"),
+    "node_kill_when_all_dead": (
+        [(1.0, "fail-stop-node", 1), (2.0, "fail-stop-node", 1)],
+        "already dead"),
+    "rejoin_before_any_failure": (
+        [(1.0, "rejoin", 5)], "before any failure"),
+    "net_restore_without_degrade": (
+        [(1.0, "net-restore", 0)], "without an active"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(REJECTIONS))
+def test_validate_rejects(name):
+    rows, fragment = REJECTIONS[name]
+    with pytest.raises(TraceValidationError, match="event "):
+        _tr(*rows).validate(VTOPO)
+    with pytest.raises(TraceValidationError) as exc:
+        _tr(*rows).validate(VTOPO)
+    assert fragment in str(exc.value)
+
+
+def test_validate_accepts_legitimate_lifecycles():
+    """The rules must not reject real patterns: kill->rejoin->kill flaps,
+    rejoin after fail-slow (recovery), degraded returns, stacked
+    net-degrades with one restore, node kill after a device kill on the
+    same node."""
+    _tr((1.0, "fail-stop", 0), (2.0, "rejoin", 0),
+        (3.0, "fail-stop", 0)).validate(VTOPO)
+    _tr((1.0, "fail-slow", 1, 0.5), (2.0, "rejoin", 1)).validate(VTOPO)
+    _tr((1.0, "fail-stop", 2), (2.0, "rejoin", 2, 0.6),
+        (3.0, "rejoin", 2)).validate(VTOPO)
+    _tr((1.0, "net-degrade", 0, 0.5), (2.0, "net-degrade", 0, 0.8),
+        (3.0, "net-restore", 0)).validate(VTOPO)
+    _tr((1.0, "fail-stop", 4), (2.0, "fail-stop-node", 1)).validate(VTOPO)
+
+
+def test_validate_returns_self_and_skips_callbacks():
+    tr = _tr((1.0, "fail-stop", 0))
+    assert tr.validate(VTOPO) is tr
+    cb = EventTrace([Event(1.0, "callback", fn=lambda c, now: None)])
+    cb.validate(VTOPO)  # opaque, skipped
+
+
+def test_apply_scenario_validates_by_default():
+    """The simulator rejects contradictory scenarios up front; the
+    validate=False escape hatch replays them anyway (legacy behavior)."""
+    from repro.cluster.scenarios import Rejoin
+
+    sim = TrainingSim("resihp", SMALL)
+    with pytest.raises(TraceValidationError):
+        sim.apply_scenario(Rejoin(device=3, at=1.0))
+    sim = TrainingSim("resihp", SMALL)
+    tr = sim.apply_scenario(Rejoin(device=3, at=1.0), validate=False)
+    assert len(tr) == 1
 
 
 # ------------------------------------------------------------- composition

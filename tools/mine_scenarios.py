@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Mine adversarial failure scenarios (driver for repro.cluster.mining).
+
+Runs the coverage-guided search at the 256-device mining scale, writes the
+canonical report to ``results/<out>.json`` and prints the ranked clusters.
+Deterministic for a fixed ``(--seed, --budget)`` and invariant to
+``--workers`` (see the determinism contract in
+:mod:`repro.cluster.mining`), so the checked-in artifact regenerates
+byte-identically:
+
+    PYTHONPATH=src python tools/mine_scenarios.py --quick        # regenerate
+    PYTHONPATH=src python tools/mine_scenarios.py --quick --check  # CI smoke
+
+``--check`` re-verifies the checked-in ``results/adversarial_mined.json``
+against this run: the top-ranked cluster's signature (and timeline) must be
+re-found, and the quick run must beat the worst hand-authored catalog
+scenario — the nightly regression that keeps the ``adversarial_*`` family
+honest. Deeper local searches: raise ``--budget`` (and ``--workers``).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(REPO_ROOT / "src"), str(REPO_ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.sweep import pmap  # noqa: E402
+from repro.cluster import mining  # noqa: E402
+
+QUICK = dict(seed=0, budget=128, iters=30)  # the checked-in artifact's recipe
+
+
+def check(report: dict, pinned: dict) -> list:
+    """The --check contract; returns a list of failure strings."""
+    errors = []
+    for mine_e, pin_e in zip(report["family"], pinned["family"]):
+        if mine_e["signature"] != pin_e["signature"]:
+            errors.append(
+                f"family[{pin_e['rank']}] ({pin_e['objective']}) signature "
+                f"changed: {mine_e['signature']} != {pin_e['signature']}")
+        elif mine_e["timeline"] != pin_e["timeline"]:
+            errors.append(f"family[{pin_e['rank']}] timeline changed")
+    if report["n_clusters"] < 3 or len(report["family"]) < 3:
+        errors.append(f"only {report['n_clusters']} distinct clusters / "
+                      f"{len(report['family'])} family members (need >= 3)")
+    worst = report["worst_catalog"]["session_throughput"]["resihp"]
+    mined = min(c["session_throughput"]["resihp"] for c in report["family"])
+    if not mined < worst:
+        errors.append(f"no mined family scenario ({mined:.6g}) beats the "
+                      f"worst catalog scenario ({worst:.6g}) on resihp "
+                      "session throughput")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="coverage-guided adversarial scenario mining")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"the fixed CI recipe {QUICK} (the checked-in "
+                         "artifact's exact parameters)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget", type=int, default=256,
+                    help="candidate evaluations, catalog seeds included")
+    ap.add_argument("--iters", type=int, default=30,
+                    help="training iterations per candidate run")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="worker processes (0 = one per core; 1 = serial); "
+                         "never changes the output bytes")
+    ap.add_argument("--engine", choices=("fast", "python"), default="fast")
+    ap.add_argument("--out", type=str, default="adversarial_mined",
+                    help="results/<out>.json artifact name")
+    ap.add_argument("--check", action="store_true",
+                    help="verify this run against the checked-in "
+                         "results/adversarial_mined.json (nightly smoke)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.seed, args.budget, args.iters = (
+            QUICK["seed"], QUICK["budget"], QUICK["iters"])
+
+    # snapshot the pinned artifact BEFORE writing: with the default --out the
+    # run overwrites results/adversarial_mined.json, and a post-write load
+    # would compare the report against itself
+    pinned_path = REPO_ROOT / "results" / "adversarial_mined.json"
+    pinned = json.loads(pinned_path.read_text()) if args.check else None
+
+    import os
+    workers = args.workers if args.workers > 0 else (os.cpu_count() or 1)
+    report = mining.mine(
+        seed=args.seed, budget=args.budget, iters=args.iters,
+        engine=args.engine,
+        pool_map=functools.partial(pmap, workers=workers))
+
+    out_path = REPO_ROOT / "results" / f"{args.out}.json"
+    out_path.parent.mkdir(exist_ok=True)
+    out_path.write_text(mining.to_json(report) + "\n")
+
+    print(f"healthy resihp session: {report['healthy']['resihp']:.6g}")
+    wc = report["worst_catalog"]
+    print(f"worst catalog: {wc['name']} "
+          f"(resihp {wc['session_throughput']['resihp']:.6g})")
+    print(f"{report['n_clusters']} distinct clusters "
+          f"({report['config']['budget']} candidates evaluated); top:")
+    for c in report["clusters"]:
+        flag = " FLIP" if c["flip"] else ""
+        print(f"  #{c['rank']} score={c['score']:.4f} "
+              f"loss={c['resihp_loss']:.4f}{flag} events={c['n_events']} "
+              f"sig={tuple(c['signature'])} [{c['label']}]")
+    print("family (-> adversarial_1/2/3):")
+    for c in report["family"]:
+        print(f"  adversarial_{c['rank']} [{c['objective']}] "
+              f"loss={c['resihp_loss']:.4f} "
+              f"resihp={c['session_throughput']['resihp']:.6g} "
+              f"events={c['n_events']} [{c['label']}]")
+    print(f"wrote {out_path.relative_to(REPO_ROOT)}")
+
+    if args.check:
+        errors = check(report, pinned)
+        for e in errors:
+            print(f"CHECK FAILED: {e}", file=sys.stderr)
+        if errors:
+            return 1
+        print("check passed: pinned top pattern re-found")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
