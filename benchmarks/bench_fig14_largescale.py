@@ -19,7 +19,7 @@ from repro.cluster.simulator import TrainingSim
 
 # device count -> Table-3 scale preset (all share llama2-70b layer costs)
 SCALES = {256: "xlarge", 1024: "1k", 2048: "2k", 4096: "4k",
-          8192: "8k", 16384: "16k"}
+          8192: "8k", 16384: "16k", 32768: "32k", 102400: "100k"}
 
 
 def run(policy: str, kw=None, *, iters=160, seed=0, engine="fast",

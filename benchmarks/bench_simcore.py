@@ -28,15 +28,16 @@ import json
 from pathlib import Path
 
 from benchmarks.bench_fig14_largescale import run
-from benchmarks.common import RESULTS, write_result
+from benchmarks.common import RESULTS, peak_rss_mb, write_result
 
 REPO_ROOT_JSON = RESULTS.parent / "BENCH_simcore.json"
 REFERENCE_JSON = Path(__file__).resolve().parent / "simcore_reference.json"
 
 QUICK_POINTS = [("python", 256), ("fast", 256), ("fast", 1024),
-                ("fast", 4096)]
+                ("fast", 4096), ("fast", 32768)]
 FULL_POINTS = [("python", 256), ("fast", 256), ("fast", 1024),
-               ("fast", 2048), ("fast", 8192), ("fast", 16384)]
+               ("fast", 2048), ("fast", 8192), ("fast", 16384),
+               ("fast", 32768)]
 
 
 def check_against_reference(results: dict, iters: int, *,
@@ -92,6 +93,10 @@ def main(quick=False, check=False):
             "wall_ms_per_device": round(1000.0 * r["wall_s"] / devices, 4),
             "avg_throughput": r["avg_throughput"],
             "aborted": r["aborted"],
+            # ru_maxrss is a process-wide high-water mark: the reading on
+            # each row (points run smallest-to-largest) bounds that row's
+            # footprint from above
+            "peak_rss_mb": peak_rss_mb(),
         }
     # the two engines must agree exactly — bit-for-bit is the contract
     assert (results["python@256"]["avg_throughput"]
@@ -120,7 +125,8 @@ def main(quick=False, check=False):
 
     rows = [(f"simcore/{k}/wall_s", v["wall_s"],
              f"thpt={v['avg_throughput']:.2f} "
-             f"per_dev_ms={v['wall_ms_per_device']}")
+             f"per_dev_ms={v['wall_ms_per_device']} "
+             f"peak_rss_mb={v['peak_rss_mb']}")
             for k, v in results.items()]
     rows.append(("simcore/speedup_fast_vs_python@256", round(speedup, 1), ""))
     if "per_device_scaling_16384_vs_2048" in payload:

@@ -30,6 +30,8 @@ TABLE3 = {
     "4k": (8, 16, 32),    # 4096 devices
     "8k": (8, 32, 32),    # 8192 devices
     "16k": (8, 64, 32),   # 16384 devices
+    "32k": (8, 128, 32),  # 32768 devices
+    "100k": (8, 400, 32),  # 102400 devices — the Meta/SPARe production regime
 }
 MODELS = {
     "llama2-7b": ("small", 32),
@@ -52,6 +54,16 @@ def sim_config(model: str, *, seq_len=8192, n_mb=8, noise=0.01, seed=0,
     return SimConfig(dp=dp, pp=pp, tp=tp, n_layers=n_layers,
                      n_microbatches=n_mb, seq_len=seq_len, noise=noise,
                      seed=seed)
+
+
+def peak_rss_mb() -> float:
+    """Process peak resident set in MiB (``ru_maxrss``) — a monotone
+    high-water mark over the whole process, so per-row readings in a multi-
+    row benchmark bound each row's footprint from above (the first row that
+    *raises* the reading is the one that needed the memory)."""
+    import resource
+    kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return round(kb / 1024.0, 1)
 
 
 def write_result(name: str, payload: dict):

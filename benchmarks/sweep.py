@@ -38,41 +38,50 @@ from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 
 from benchmarks import bench_scenarios
-from benchmarks.common import write_result
+from benchmarks.common import TABLE3, write_result
 
 
 @dataclass(frozen=True)
 class Cell:
-    """One grid cell — the complete, self-contained recipe for one run."""
+    """One grid cell — the complete, self-contained recipe for one run.
+
+    ``scale`` is an optional Table-3 parallelism preset (``"1k"``/``"16k"``/
+    ``"32k"``...) overriding the model's native one — the multi-scale axis.
+    ``None`` (the default) keeps the model's native preset AND the cell key,
+    so single-scale sweeps stay byte-identical to the pre-axis artifact."""
 
     model: str
     scenario: str
     policy: str
     seed: int
     iters: int
+    scale: str | None = None
 
 
 def build_grid(*, models, scenarios=None, policies=None, seeds=(0,),
-               iters=160, hazard_iters=160) -> list:
-    """Canonical cell order: models > scenarios > seeds > policies (the
-    serial bench's iteration order, extended by the seed axis)."""
+               iters=160, hazard_iters=160, scales=(None,)) -> list:
+    """Canonical cell order: models > scales > scenarios > seeds > policies
+    (the serial bench's iteration order, extended by the seed and scale
+    axes)."""
     scenarios = list(scenarios or bench_scenarios.SWEEP)
     policies = list(policies or bench_scenarios.POLICIES)
     cells = []
     for model in models:
-        for sc in scenarios:
-            sc_iters = (hazard_iters if sc in bench_scenarios.HAZARD_SCENARIOS
-                        else iters)
-            for seed in seeds:
-                for p in policies:
-                    cells.append(Cell(model, sc, p, seed, sc_iters))
+        for scale in scales:
+            for sc in scenarios:
+                sc_iters = (hazard_iters
+                            if sc in bench_scenarios.HAZARD_SCENARIOS
+                            else iters)
+                for seed in seeds:
+                    for p in policies:
+                        cells.append(Cell(model, sc, p, seed, sc_iters, scale))
     return cells
 
 
 def run_cell(cell: Cell, engine: str = "fast", full: bool = False) -> dict:
     return bench_scenarios.run(cell.model, cell.scenario, cell.policy,
                                iters=cell.iters, seed=cell.seed,
-                               engine=engine, full=full)
+                               engine=engine, scale=cell.scale, full=full)
 
 
 def pmap(fn, items, *, workers: int = 0, fn_args: tuple = ()) -> list:
@@ -92,8 +101,12 @@ def pmap(fn, items, *, workers: int = 0, fn_args: tuple = ()) -> list:
     return [f.result() for f in futures]
 
 
-def _cell_key(cell: Cell, multi_seed: bool) -> str:
+def _cell_key(cell: Cell, multi_seed: bool, multi_scale: bool = False) -> str:
     base = f"{cell.model}/{cell.scenario}"
+    if multi_scale:
+        # native scale keeps a stable name so a multi-scale sweep's keys are
+        # self-describing without looking up each model's preset
+        base = f"{base}@{cell.scale or 'native'}"
     return f"{base}/s{cell.seed}" if multi_seed else base
 
 
@@ -102,30 +115,37 @@ def sweep(cells, *, workers: int = 0, engine: str = "fast",
     """Run every cell and merge into the serial path's nested dict layout.
     ``workers <= 1`` runs in-process (the reference serial path); otherwise a
     process pool executes cells concurrently and the merge reassembles them
-    in canonical grid order, byte-identical to serial."""
+    in canonical grid order, byte-identical to serial. The ``@scale`` key
+    level appears only when the grid actually spans more than one scale, so
+    default sweeps keep their historical keys."""
     cells = list(cells)
     results = dict(zip(cells, pmap(run_cell, cells, workers=workers,
                                    fn_args=(engine, full))))
     multi_seed = len({c.seed for c in cells}) > 1
+    multi_scale = len({c.scale for c in cells}) > 1
     out: dict = {}
     for cell in cells:
-        out.setdefault(_cell_key(cell, multi_seed), {})[cell.policy] = \
-            results[cell]
+        out.setdefault(_cell_key(cell, multi_seed, multi_scale),
+                       {})[cell.policy] = results[cell]
     return out
 
 
 def main(quick=False, engine="fast", full=False, workers=0, seeds=1,
-         scenarios=None, policies=None, out_name="scenarios_sweep"):
+         scenarios=None, policies=None, scales=None,
+         out_name="scenarios_sweep"):
     models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
     iters = 80 if quick else 160
     for sc in scenarios or ():
         assert sc in bench_scenarios.SWEEP, (sc, sorted(bench_scenarios.SWEEP))
     for p in policies or ():
         assert p in bench_scenarios.POLICIES, (p, sorted(bench_scenarios.POLICIES))
+    for s in scales or ():
+        assert s is None or s in TABLE3, (s, sorted(TABLE3))
     # the hazard families keep the full 160-iteration session even in
     # --quick mode, exactly like the serial bench (slow renewal dynamics)
     cells = build_grid(models=models, scenarios=scenarios, policies=policies,
-                       seeds=range(seeds), iters=iters)
+                       seeds=range(seeds), iters=iters,
+                       scales=tuple(scales) if scales else (None,))
     if workers <= 0:
         workers = min(len(cells), os.cpu_count() or 1)
     out = sweep(cells, workers=workers, engine=engine, full=full)
@@ -156,11 +176,19 @@ if __name__ == "__main__":
                     help="comma-separated scenario subset (default: all)")
     ap.add_argument("--policies", type=str, default=None,
                     help="comma-separated policy subset (default: all)")
+    ap.add_argument("--scales", type=str, default=None,
+                    help="comma-separated Table-3 scale presets, e.g. "
+                         "1k,16k,32k; 'native' keeps the model's own preset "
+                         "(default: native only, no @scale key level)")
     ap.add_argument("--out", type=str, default="scenarios_sweep",
                     help="results/<out>.json artifact name")
     args = ap.parse_args()
+    scales = None
+    if args.scales:
+        scales = [None if s == "native" else s
+                  for s in args.scales.split(",")]
     emit(main(quick=args.quick, engine=args.engine, full=args.full,
               workers=1 if args.serial else args.workers, seeds=args.seeds,
               scenarios=args.scenarios.split(",") if args.scenarios else None,
               policies=args.policies.split(",") if args.policies else None,
-              out_name=args.out))
+              scales=scales, out_name=args.out))

@@ -531,12 +531,17 @@ class TrainingSim:
         workload = self.gen.for_iteration(self.it)
         plan = decision.plan
         true_speed = self._true_stage_speeds(plan)
+        # dense (replica, stage) mirror of true_speed for the fast engine's
+        # batched cost gather; only valid while it matches the dict
+        speed_grid = (self._stage_speed_cache.grid
+                      if self._stage_speed_cache is not None else None)
         if decision.slowdown_recovery > 0.0:
             # schedule-level mitigation (Adaptra): hides part of a slowdown
             true_speed = {
                 e: (v + (1.0 - v) * decision.slowdown_recovery if 0.0 < v < 1.0 else v)
                 for e, v in true_speed.items()
             }
+            speed_grid = None
         # ZB splits the 1F1B backward into B (activation) + W (weight): the
         # two must sum to the 1F1B backward cost, not add to it
         if decision.schedule.lower().startswith("zb"):
@@ -553,7 +558,8 @@ class TrainingSim:
                     alpha=cfg.alpha, beta=cfg.beta, gamma=cfg.gamma,
                     workload=workload, share=share,
                     n_layers=len(self.layer_costs), mult=mult, jit=jit,
-                    true_speed=true_speed, replica_map=replica_map)
+                    true_speed=true_speed, replica_map=replica_map,
+                    true_speed_grid=speed_grid)
 
             def cost(cid: ChunkId, executor) -> float:
                 r = replica_map(cid.replica) if replica_map else cid.replica

@@ -36,6 +36,25 @@ from typing import Callable, Optional
 from repro.core.detector.dag_sim import ChunkId
 from repro.engine.schedules import make_schedule
 
+#: Same-timestamp batching window (seconds): events within this epsilon of
+#: the batch head are drained and processed as one step before the policy
+#: decides — symmetric replicas complete simultaneously, and deciding
+#: mid-batch would see phantom progress gaps. Both engines MUST share this
+#: constant (the fast engine imports it): a fast engine batching at a
+#: different epsilon would split or merge batches differently at timestamp
+#: collisions and silently break bit-for-bit parity.
+SAME_TIME_EPS = 1e-12
+
+
+def _budget_error(now: float, heap_size: int, undone: int, total: int,
+                  limit: int) -> RuntimeError:
+    """Actionable livelock-guard report, shared by both engines: the bare
+    'event budget exceeded' left nothing to debug with."""
+    return RuntimeError(
+        f"migration sim: event budget exceeded (livelock?): "
+        f"t={now:.6g}, heap_size={heap_size}, "
+        f"undone_chunks={undone}/{total}, budget={limit}")
+
 
 @dataclass
 class MigrationEvent:
@@ -75,6 +94,7 @@ class ProgressAwareMigrator:
         p2p_cost: float = 0.0,  # same-replica inter-stage edge seconds
         migrate_edge_cost: float = 0.0,  # extra cross-replica edge seconds
         max_migrations_per_event: int = 4,
+        event_budget: Optional[int] = None,  # livelock guard (default 50x chunks)
     ):
         self.n_stages = n_stages
         self.n_replicas = n_replicas
@@ -89,6 +109,7 @@ class ProgressAwareMigrator:
         self.migrate_edge_cost = migrate_edge_cost
         self.dead = set(dead_executors)
         self.max_migrations_per_event = max_migrations_per_event
+        self.event_budget = event_budget
 
         # build per-replica schedules
         self.own_order: dict = {}
@@ -306,17 +327,20 @@ class ProgressAwareMigrator:
         for e in self.own_order:
             seq = self._dispatch(e, 0.0, heap, seq)
         guard = 0
-        limit = 50 * max(1, len(self.chunks))
+        limit = (self.event_budget if self.event_budget is not None
+                 else 50 * max(1, len(self.chunks)))
         while heap:
             guard += 1
             if guard > limit:
-                raise RuntimeError("migration sim: event budget exceeded (livelock?)")
+                raise _budget_error(heap[0][0], len(heap),
+                                    len(self.chunks) - len(self.done),
+                                    len(self.chunks), limit)
             now, _, ev = heapq.heappop(heap)
             # drain all events at (effectively) the same timestamp before
             # deciding: symmetric replicas complete simultaneously, and
             # deciding mid-batch would see phantom progress gaps.
             batch = [ev]
-            while heap and heap[0][0] <= now + 1e-12:
+            while heap and heap[0][0] <= now + SAME_TIME_EPS:
                 batch.append(heapq.heappop(heap)[2])
             any_done = False
             for ev in batch:

@@ -1,0 +1,158 @@
+"""Direct unit tests for the fast engine's event-loop core.
+
+The scenario-level parity suite (``test_engine_parity.py``) pins the two
+engines against each other through the full simulator; the tests here go
+one level down and exercise the ``FastMigrator`` internals the batched
+refactor leans on:
+
+* the shared same-timestamp epsilon (``SAME_TIME_EPS``) at an actual
+  collision boundary,
+* the livelock budget guard's diagnostic payload,
+* ``_ready_time`` cross-replica migrate-edge costing (and the ready-memo
+  invalidation that keeps the memoized fast path honest),
+* ``_next_pending`` cursor monotonicity,
+* a ``vec_batch_min=1`` sweep that forces every dispatch round down the
+  vectorized array path and demands bit-for-bit identity with the python
+  reference engine.
+"""
+import pytest
+
+import repro.cluster.fastsim as fastsim
+from repro.cluster.fastsim import FastMigrator
+from repro.core.scheduler import migration
+from repro.core.scheduler.migration import SAME_TIME_EPS, ProgressAwareMigrator
+
+
+def _cost(cid, e):
+    return {"F": 1.0, "B": 2.0, "W": 0.5}[cid.kind]
+
+
+def _result_tuple(res):
+    """Everything observable in a SimResult, exactly."""
+    return (res.makespan, res.status, sorted(res.finish.items(), key=str),
+            [(m.time, m.chunk, m.src, m.dst, m.reason)
+             for m in res.migrations],
+            sorted(res.per_replica_finish.items()))
+
+
+# ------------------------------------------------------ same-time epsilon
+def test_same_time_eps_is_the_shared_constant():
+    # one constant, defined by the reference engine, imported by the fast
+    # engine — not two numbers that happen to agree today
+    assert fastsim.SAME_TIME_EPS is migration.SAME_TIME_EPS
+
+
+@pytest.mark.parametrize("vec_min", [None, 1])
+def test_parity_at_timestamp_collision_boundary(vec_min):
+    """Zero-noise symmetric replicas put whole waves of completions at
+    *identical* timestamps, and a straggler offset below SAME_TIME_EPS keeps
+    them inside one drain batch: the batched engine must group and commit
+    exactly like the reference."""
+    sub_eps = 1.0 + SAME_TIME_EPS / 4  # collides within the epsilon window
+
+    def cost(cid, e):
+        base = _cost(cid, e)
+        if e == (1, 1):
+            base *= sub_eps  # straggler whose events land on the boundary
+        if e == (0, 2):
+            base *= 3.0  # a real fail-slow so migrations happen too
+        return base
+
+    kw = dict(n_stages=4, n_replicas=2, n_microbatches=6, chunk_cost=cost,
+              policy="resihp", delta=1, p2p_cost=0.05,
+              migrate_edge_cost=0.2)
+    ref = ProgressAwareMigrator(**kw).run()
+    fast_kw = dict(kw)
+    if vec_min is not None:
+        fast_kw["vec_batch_min"] = vec_min
+    fast = FastMigrator(**fast_kw).run()
+    assert _result_tuple(fast) == _result_tuple(ref)
+    assert ref.migrations  # the scenario actually migrated
+
+
+# --------------------------------------------------------- livelock guard
+@pytest.mark.parametrize("cls", [ProgressAwareMigrator, FastMigrator])
+def test_event_budget_guard_reports_state(cls):
+    m = cls(n_stages=3, n_replicas=2, n_microbatches=4, chunk_cost=_cost,
+            policy="resihp", event_budget=5)
+    with pytest.raises(RuntimeError) as err:
+        m.run()
+    msg = str(err.value)
+    assert "t=" in msg
+    assert "heap_size=" in msg
+    assert "undone_chunks=" in msg
+    assert "budget=5" in msg
+
+
+# ------------------------------------------- ready-time migrate-edge cost
+def test_ready_time_charges_cross_replica_migrate_edge():
+    m = FastMigrator(n_stages=2, n_replicas=2, n_microbatches=2,
+                     chunk_cost=_cost, policy="resihp",
+                     p2p_cost=0.25, migrate_edge_cost=0.75)
+    st = m.st
+    # an F chunk on stage 1: its single dep is F on stage 0, same replica —
+    # a cross-stage edge, so at home it costs exactly the p2p charge
+    i = next(j for j in range(st.n_chunks)
+             if st.kind[j] == 0 and st.stage[j] == 1 and st.replica[j] == 0
+             and st.mb[j] == 0)
+    (d, crosses), = st.deps[i]
+    assert crosses and st.stage[d] == 0
+    assert m._ready_time(i) is None  # dep unfinished -> no ready time yet
+    m.finish[d] = 5.0
+    assert m._ready_time(i) == pytest.approx(5.0 + 0.25)
+
+    # migrate i to the other replica's stage-1 executor: the dep edge now
+    # also crosses replicas, so the migrate-edge charge stacks on the p2p
+    dst = 1 * m.n_stages + 1
+    m._migrate(i, dst, 0.0, "test", set())
+    assert m.exec_of[i] == dst
+    assert m._ready_time(i) == pytest.approx(5.0 + 0.25 + 0.75)
+    # the ready memo for the moved group was invalidated with the refresh
+    assert m._ready_memo[i] is None
+
+
+# ------------------------------------------------ pending-cursor monotone
+def test_next_pending_cursor_is_monotone():
+    m = FastMigrator(n_stages=2, n_replicas=2, n_microbatches=4,
+                     chunk_cost=_cost, policy="resihp")
+    st = m.st
+    e = 0  # executor (replica 0, stage 0)
+    seen = []
+    cursors = [m.pend_cursor[e]]
+    for _ in range(m.n_mb[0]):
+        j = m._next_pending(0, 0)
+        assert j is not None and st.kind[j] == 0
+        seen.append(j)
+        # consuming the chunk (started or migrated) must advance, never
+        # rewind, the scan cursor
+        m.started[j] = True
+        cursors.append(m.pend_cursor[e])
+    assert m._next_pending(0, 0) is None
+    cursors.append(m.pend_cursor[e])
+    assert cursors == sorted(cursors)
+    assert len(set(seen)) == len(seen)  # each F chunk surfaced exactly once
+    # micro-batches surface in schedule order
+    assert [st.mb[j] for j in seen] == sorted(st.mb[j] for j in seen)
+
+
+# ------------------------------------------- forced-vector-path parity
+@pytest.mark.parametrize("n_mb", [4, [3, 5, 4]])
+def test_vec_batch_min_one_forces_array_path_parity(n_mb):
+    """With ``vec_batch_min=1`` every dispatch round takes the batched
+    build/ready/select/commit path (journal flush included); the result must
+    stay bit-for-bit the reference's, including under nonuniform per-replica
+    micro-batch counts and a fail-stop."""
+    n_replicas = 3 if isinstance(n_mb, list) else 2
+
+    def cost(cid, e):
+        return _cost(cid, e) * (2.5 if e == (0, 1) else 1.0)
+
+    kw = dict(n_stages=3, n_replicas=n_replicas, n_microbatches=n_mb,
+              chunk_cost=cost, policy="resihp", delta=0,
+              dead_executors=[(0, 2)], p2p_cost=0.1, migrate_edge_cost=0.3)
+    ref = ProgressAwareMigrator(**kw).run()
+    forced = FastMigrator(vec_batch_min=1, **kw).run()
+    default = FastMigrator(**kw).run()
+    assert _result_tuple(forced) == _result_tuple(ref)
+    assert _result_tuple(default) == _result_tuple(ref)
+    assert ref.status == "ok" and ref.migrations
