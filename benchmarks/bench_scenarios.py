@@ -21,7 +21,11 @@ quarantine + risk-aware placement): the risk-aware planner, against
 ``ResiHPPolicy(ntp=...)`` enabled (nonuniform TP shard widths): shrink-shard
 competes with Eq. 4 exclusion per affected group, against plain ``resihp``
 as the exclusion-only reference — its signature win is the
-``thermal_throttle_fleet`` many-mild-stragglers family. Rows carry the lifecycle /
+``thermal_throttle_fleet`` many-mild-stragglers family. ``resihp+dom`` is
+ResiHP with ``ResiHPPolicy(domains=...)`` enabled (pooled domain-level
+quarantine + domain-spread placement + checkpoint/restart economics),
+against ``resihp+hz`` as the domain-blind reference — its signature win is
+the ``pdu_brownout`` correlated-rack family. Rows carry the lifecycle /
 detector columns (validations, false alarms, quarantines, probes) plus the
 session throughput (samples per second of *elapsed* time, reconfiguration
 and stall charges included) — the metric a repeat-offender's
@@ -62,6 +66,13 @@ SWEEP = {
     "adversarial_1": lambda span: scenarios.get("adversarial_1", span=span),
     "adversarial_2": lambda span: scenarios.get("adversarial_2", span=span),
     "adversarial_3": lambda span: scenarios.get("adversarial_3", span=span),
+    # correlated failure-domain families (PR 9): a browned-out PDU whose
+    # residents fail-stop again and again (the pooled DomainEstimator's
+    # signature win), a leaf switch dragging every attached node's links,
+    # and an orchestrator restart wave marching through the fleet
+    "pdu_brownout": lambda span: scenarios.get("pdu_brownout", span=span),
+    "switch_degrade": lambda span: scenarios.get("switch_degrade", span=span),
+    "restart_storm": lambda span: scenarios.get("restart_storm", span=span),
 }
 
 # policy label -> (policy name, policy kwargs); the lifecycle/hazard runs are
@@ -78,6 +89,10 @@ POLICIES = {
     # nonuniform TP shard widths (default-off ResiHPPolicy(ntp=) switch):
     # shrink-shard competes with Eq. 4 exclusion per affected group
     "resihp+ntp": ("resihp", {"ntp": True, "plan_overhead_model": True}),
+    # correlated-failure-domain awareness (default-off ResiHPPolicy(domains=)
+    # switch): pooled domain quarantine + domain-spread placement + restart
+    # economics, against resihp+hz as the domain-blind risk-aware reference
+    "resihp+dom": ("resihp", {"domains": True, "plan_overhead_model": True}),
     "recycle+": ("recycle+", {}),
     "oobleck+": ("oobleck+", {}),
 }
@@ -127,10 +142,23 @@ def derive_rows(key_prefix: str, rs: dict) -> list:
         elif p == "resihp+hz":
             lc = r.get("lifecycle", {})
             blind = rs.get("resihp+lc", {}).get("session_throughput", 0.0)
+            vs = (f"{r['session_throughput'] / blind:.2f}x" if blind > 0
+                  else "n/a")  # reference row absent in a sub-sweep
             derived = (f"quar={lc.get('quarantines', 0)}"
                        f" deferred={lc.get('rejoins_deferred', 0)}"
                        f" {sess}"
-                       f" vs_blind={r['session_throughput'] / max(blind, 1e-9):.2f}x")
+                       f" vs_blind={vs}")
+        elif p == "resihp+dom":
+            # the domain-awareness comparison: pooled rack benching +
+            # restart economics vs per-device risk only (>1.00x = domain
+            # pooling wins; its signature family is pdu_brownout)
+            lc = r.get("lifecycle", {})
+            hz = rs.get("resihp+hz", {}).get("session_throughput", 0.0)
+            vs = (f"{r['session_throughput'] / hz:.2f}x" if hz > 0
+                  else "n/a")
+            derived = (f"quar={lc.get('quarantines', 0)}"
+                       f" {sess}"
+                       f" vs_hz={vs}")
         elif p == "resihp+ntp":
             # the adaptation-axis comparison: shrink-shard vs exclusion-only
             # planning on the same scenario (>1.00x = NTP wins)
@@ -151,8 +179,10 @@ def derive_rows(key_prefix: str, rs: dict) -> list:
 # the hazard families model slow per-device renewal dynamics (lemon repair/
 # re-fail cycles, quarantine backoffs): they need the full 160-iteration
 # session to play out, so they keep it even in --quick mode (still seconds
-# of wall clock on the fast engine)
-HAZARD_SCENARIOS = ("aging_fleet", "lemon_devices", "infant_mortality")
+# of wall clock on the fast engine). pdu_brownout rides with them: its
+# bench-the-rack-then-hold arc needs the same full session.
+HAZARD_SCENARIOS = ("aging_fleet", "lemon_devices", "infant_mortality",
+                    "pdu_brownout")
 
 
 def main(quick=False, engine="fast", full=False):

@@ -1,6 +1,23 @@
-from repro.checkpoint.checkpoint import (  # noqa: F401
-    CheckpointManager,
-    latest_step,
-    restore_checkpoint,
-    save_checkpoint,
-)
+"""Checkpoint subsystem.
+
+``RestartCostModel`` (the jax-free economics side) imports eagerly; the
+tensor save/restore API lives in ``repro.checkpoint.checkpoint``, which
+imports jax, and is loaded lazily so the cluster simulator can price
+restart-from-checkpoint without dragging an accelerator runtime into the
+event loop.
+"""
+from repro.checkpoint.economics import RestartCostModel  # noqa: F401
+
+_LAZY = ("CheckpointManager", "latest_step", "restore_checkpoint",
+         "save_checkpoint")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.checkpoint import checkpoint as _ckpt
+        return getattr(_ckpt, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -330,10 +330,21 @@ class ResiHPPolicy(BasePolicy):
     # OFF): a mildly-slow device keeps a proportionally smaller shard
     # instead of being excluded — see tp_reconfig.shrink_shard_candidate.
     ntp: Optional[object] = None
+    # correlated-failure-domain awareness (DomainPolicyConfig; ``True`` for
+    # defaults; default OFF): pooled domain-level quarantine + domain-spread
+    # placement risk + checkpoint/restart economics. Reads the same
+    # FailureHistory records as the hazard estimator, so enabling
+    # ``domains`` turns the default hazard (and therefore lifecycle)
+    # switch on if it was off.
+    domains: Optional[object] = None
     # physical topology (device -> node; TrainingSim wires topo.node_of) so
     # the Scheduler honors the §6.1 node-local-standby contract. None =>
     # plan-only use without a topology, whole-pool standby offers.
     node_of: Optional[object] = None
+    # device -> failure-domain map (TrainingSim wires topo.pdu_of & co. when
+    # ``domains`` is on): lets the Scheduler order standby offers toward
+    # less-failed domains. None => legacy offer order, byte-identical.
+    domain_of: Optional[object] = None
 
     def __post_init__(self):
         # the plan whose layers are currently resident on the devices — what
@@ -343,6 +354,21 @@ class ResiHPPolicy(BasePolicy):
             from repro.core.detector.lifecycle import LifecycleConfig
 
             self.lifecycle = LifecycleConfig()
+        if self.domains is True:
+            from repro.cluster.hazard import DomainPolicyConfig
+
+            self.domains = DomainPolicyConfig()
+        if self.domains:
+            import dataclasses as _dc
+
+            if self.domains.restart is True:
+                from repro.checkpoint import RestartCostModel
+
+                self.domains = _dc.replace(self.domains,
+                                           restart=RestartCostModel())
+            if not self.hazard:
+                self.hazard = True  # pooled detection rides on the same
+                # FailureHistory evidence the per-device estimator keeps
         if self.hazard is True:
             from repro.cluster.hazard import HazardPolicyConfig
 
@@ -365,6 +391,7 @@ class ResiHPPolicy(BasePolicy):
                 enable_repartition=self.enable_repartition,
                 ntp=self.ntp,
                 node_of=self.node_of,
+                domain_of=self.domain_of,
                 # effective speeds are normalized against the healthy plan's
                 # widest group even when re-adapting a shrunk plan
                 baseline_tp=max(st.tp for rep in self.plan0.replicas
@@ -409,6 +436,22 @@ class ResiHPPolicy(BasePolicy):
                 + self.group_rebuild_s
                 + moved_layers * self.layer_transfer_s_per_layer
             )
+        notes = list(ad.notes)
+        if changed and self.domains is not None \
+                and getattr(self.domains, "restart", None) is not None:
+            # checkpoint/restart economics: when the modeled cost of
+            # restart-from-checkpoint (relaunch + restore read + replayed
+            # work) undercuts live adaptation (replan + group rebuild +
+            # layer migration), take the restart — state reaches the new
+            # plan via the checkpoint restore instead of layer transfers,
+            # and the session is charged the restart price. Strictly-below
+            # comparison: at equal cost live adaptation wins (no lost
+            # iterations to replay outside the model's expectation).
+            restart_s = self.domains.restart.restart_cost_s()
+            if restart_s < overhead:
+                notes.insert(0, "restart-from-checkpoint: "
+                                f"{restart_s:.3f}s < live {overhead:.3f}s")
+                overhead = restart_s
         self._prev_plan = ad.plan
         return PolicyDecision(
             plan=ad.plan,
@@ -418,7 +461,7 @@ class ResiHPPolicy(BasePolicy):
             reconfig_overhead_s=overhead,
             aborted=ad.restore_required,  # needs checkpoint fallback (Fig. 8b)
             delta=self.delta,
-            detail="; ".join(ad.notes[:3]),
+            detail="; ".join(notes[:3]),
         )
 
 

@@ -52,6 +52,7 @@ import numpy as np
 
 __all__ = [
     "HazardConfig", "HazardModel", "HazardPolicyConfig", "HazardEstimator",
+    "DomainPolicyConfig", "DomainEstimator",
 ]
 
 
@@ -76,6 +77,15 @@ class HazardConfig:
     lemon_frac: float = 0.0
     lemon_factor: float = 8.0
     wear_per_repair: float = 1.0
+    # -------- topology covariates (default-off: per-device independence) --
+    # A seeded ``bad_domain_frac`` fraction of failure domains (PDUs by
+    # default — see ``ClusterTopology.nodes_per_pdu``) go *bad*: every
+    # resident device's hazard rate is multiplied by ``bad_domain_factor``.
+    # This is the correlated-failure regime fleet retrospectives report —
+    # a browned-out PDU takes out devices by rack, not independently.
+    bad_domain_frac: float = 0.0
+    bad_domain_factor: float = 1.0
+    domain: str = "pdu"  # grouping: 'pdu' | 'switch' | 'node'
 
     def __post_init__(self):
         if self.mttf_s <= 0 or self.shape <= 0:
@@ -84,18 +94,50 @@ class HazardConfig:
             raise ValueError("lemon_frac must be in [0, 1]")
         if self.lemon_factor < 1.0 or self.wear_per_repair < 1.0:
             raise ValueError("lemon_factor / wear_per_repair must be >= 1")
+        if not (0.0 <= self.bad_domain_frac <= 1.0):
+            raise ValueError("bad_domain_frac must be in [0, 1]")
+        if self.bad_domain_factor < 1.0:
+            raise ValueError("bad_domain_factor must be >= 1")
+        if self.domain not in ("pdu", "switch", "node", "rack"):
+            raise ValueError(f"unknown domain kind {self.domain!r}")
+
+    def __repr__(self):
+        # HazardConfig reprs are embedded in scenario reprs, which key the
+        # DSL's derived RNG streams: with the domain covariates unset this
+        # must reproduce the pre-domain dataclass repr byte-for-byte so
+        # existing hazard families (aging_fleet, lemon_devices, ...) keep
+        # their compiled timelines.
+        s = (f"HazardConfig(mttf_s={self.mttf_s!r}, shape={self.shape!r}, "
+             f"age_spread_s={self.age_spread_s!r}, "
+             f"lemon_frac={self.lemon_frac!r}, "
+             f"lemon_factor={self.lemon_factor!r}, "
+             f"wear_per_repair={self.wear_per_repair!r}")
+        if self.bad_domain_frac > 0.0:
+            s += (f", bad_domain_frac={self.bad_domain_frac!r}, "
+                  f"bad_domain_factor={self.bad_domain_factor!r}, "
+                  f"domain={self.domain!r}")
+        return s + ")"
 
 
 class HazardModel:
     """Per-device Weibull renewal process over a fleet of ``n_devices``.
 
     Construction consumes exactly two vectorized draws from ``rng`` (lemon
-    assignment, initial ages), so scenario compilation stays deterministic
-    and composition-stable under the DSL's derived-RNG contract.
+    assignment, initial ages) — plus one more, gated on
+    ``cfg.bad_domain_frac > 0``, for bad-domain assignment — so scenario
+    compilation stays deterministic and composition-stable under the DSL's
+    derived-RNG contract (covariates off ⇒ identical draw sequence to the
+    pre-domain model).
+
+    With the domain covariates on, ``topo`` (a
+    :class:`~repro.cluster.registry.ClusterTopology`) supplies the device →
+    domain map; a seeded ``bad_domain_frac`` fraction of domains (at least
+    one, same guarantee as the lemon tail) multiplies every resident
+    device's hazard rate by ``bad_domain_factor``.
     """
 
     def __init__(self, cfg: HazardConfig, n_devices: int,
-                 rng: np.random.Generator):
+                 rng: np.random.Generator, topo=None):
         self.cfg = cfg
         self.n_devices = int(n_devices)
         u = rng.uniform(size=self.n_devices)
@@ -111,6 +153,22 @@ class HazardModel:
                      if cfg.age_spread_s > 0.0 else np.zeros(self.n_devices))
         self.mult = np.ones(self.n_devices)
         self.lemons = lemons
+        self.bad_domains = frozenset()
+        if cfg.bad_domain_frac > 0.0 and self.n_devices:
+            if topo is None:
+                raise ValueError(
+                    "HazardConfig.bad_domain_frac > 0 needs a ClusterTopology"
+                    " for the device -> domain map (pass topo=)")
+            dom = np.array([topo.domain_of(d, cfg.domain)
+                            for d in range(self.n_devices)], dtype=np.intp)
+            n_dom = int(dom.max()) + 1
+            v = rng.uniform(size=n_dom)
+            bad = v < cfg.bad_domain_frac
+            if not bad.any():
+                # same always-at-least-one guarantee as the lemon tail
+                bad[int(np.argmin(v))] = True
+            self.bad_domains = frozenset(np.nonzero(bad)[0].tolist())
+            self.mult[bad[dom]] *= cfg.bad_domain_factor
 
     # --------------------------------------------------------------- query
     def cumulative_hazard(self, device: int, age_s: float) -> float:
@@ -274,6 +332,109 @@ class HazardEstimator:
         ratio = self.risk(history, now) / self.cfg.rate_threshold_ratio
         dur = base_s * max(ratio, 1.0) * factor ** max(level - 1, 0)
         return min(dur, max_s)
+
+
+# ------------------------------------------------- pooled (domain) side
+@dataclass(frozen=True)
+class DomainPolicyConfig:
+    """Default-off policy switch for *domain-level* failure awareness
+    (``ResiHPPolicy(domains=...)``; ``domains=True`` for these defaults).
+    Implies the hazard estimator (and therefore the lifecycle subsystem):
+    the pooled estimator reads the same per-device ``FailureHistory``
+    records, aggregated by the topology's domain map.
+
+    * ``domain`` — which correlation domain to pool over ('pdu' | 'switch'
+      | 'node'); PDUs are the default because brownouts are the canonical
+      correlated killer.
+    * ``quarantine`` — when a domain's pooled risk crosses
+      ``rate_threshold_ratio`` *and* at least ``min_devices`` distinct
+      resident devices failed inside the window, every resident device is
+      excluded from placement (the whole rack is benched before its third
+      device fails). Purely functional in ``now``: the window sliding past
+      the burst readmits the domain with no extra state.
+    * ``spread`` — feed the pooled risk to ``Scheduler.adapt`` as
+      per-device risk (max-merged with the per-device estimate) so
+      equal-throughput placement ties break away from hot domains, and TP
+      groups / standbys straddle domains.
+    * ``hold_s`` — minimum bench time once a domain trips. Domain evidence
+      goes quiet the moment the bench works (a standby device's throttling
+      never shows up in iteration time), so a purely window-functional
+      quarantine flaps: trip, evidence ages out, readmit, re-detect,
+      re-trip — each flip a full replan with migrations. The hold keeps a
+      tripped domain benched for ``hold_s`` after its last supporting
+      evidence, trading a bounded capacity tax for churn immunity.
+    * ``restart`` — a :class:`~repro.checkpoint.RestartCostModel` (or
+      ``True`` for its defaults, ``None`` to disable): lets the policy
+      charge restart-from-checkpoint instead of live migration whenever the
+      modeled restart cost undercuts the live adaptation cost.
+    """
+
+    domain: str = "pdu"
+    prior_failures: float = 0.5  # same normalization as HazardPolicyConfig
+    window_s: float = 60.0
+    rate_threshold_ratio: float = 4.0
+    min_devices: int = 2  # distinct recent-failing residents to quarantine
+    quarantine: bool = True
+    spread: bool = True
+    hold_s: float = 90.0  # bench dwell after the last supporting evidence
+    restart: object = True
+
+    def __post_init__(self):
+        if self.domain not in ("pdu", "switch", "node", "rack"):
+            raise ValueError(f"unknown domain kind {self.domain!r}")
+        if self.prior_failures <= 0:
+            raise ValueError("prior_failures must be > 0")
+        if self.window_s <= 0:
+            raise ValueError("window_s must be > 0")
+        if self.rate_threshold_ratio < 1.0:
+            raise ValueError("rate_threshold_ratio must be >= 1")
+        if self.min_devices < 1:
+            raise ValueError("min_devices must be >= 1")
+        if self.hold_s < 0:
+            raise ValueError("hold_s must be >= 0")
+
+
+class DomainEstimator:
+    """Pooled sibling of :class:`HazardEstimator`: the same exposure-free
+    risk score, computed over the union of a domain's resident
+    ``FailureHistory`` records — ``1 + pooled_recent / prior_failures``.
+    On a single-device domain this reduces *exactly* to the per-device
+    estimator's score (same prior, same window, same fail-stop+fail-slow
+    evidence), so domain pooling is a strict generalization, not a second
+    calibration.
+
+    Quarantine additionally requires ``min_devices`` distinct recent-failing
+    residents: two failures on one device are that device's problem (the
+    per-device estimator already benches it); two failures on two devices of
+    the same rack are the rack's problem — that correlation is the only
+    signal this class adds."""
+
+    def __init__(self, cfg: DomainPolicyConfig):
+        self.cfg = cfg
+
+    def _recent(self, histories, now: float):
+        """Pooled in-window failure count + the distinct devices involved."""
+        t0 = now - self.cfg.window_s
+        n, devs = 0, set()
+        for h in histories:
+            if h is None:
+                continue
+            c = (sum(1 for t in h.fail_stops if t >= t0)
+                 + sum(1 for t, _ in h.fail_slows if t >= t0))
+            if c:
+                n += c
+                devs.add(h.device)
+        return n, devs
+
+    def risk(self, histories, now: float) -> float:
+        n, _ = self._recent(histories, now)
+        return 1.0 + n / self.cfg.prior_failures
+
+    def should_quarantine(self, histories, now: float) -> bool:
+        n, devs = self._recent(histories, now)
+        return (len(devs) >= self.cfg.min_devices
+                and 1.0 + n / self.cfg.prior_failures
+                >= self.cfg.rate_threshold_ratio)
 
 
 def expected_failures(model: HazardModel, horizon_s: float) -> float:

@@ -55,8 +55,24 @@ class Device:
 
 @dataclass(frozen=True)
 class ClusterTopology:
+    """Physical layout: nodes of ``devices_per_node`` devices, grouped into
+    correlated failure domains. A *rack* is a node (the heartbeat/NVLink
+    domain the repo always had); ``nodes_per_pdu`` racks share one power
+    distribution unit and ``nodes_per_switch`` racks share one leaf switch —
+    the two correlation domains fleet reliability reports blame for most
+    multi-device incidents (a browned-out PDU elevates every resident
+    device's failure rate; a flaky switch degrades every resident link).
+    The defaults (PDU == rack, two racks per switch) keep every existing
+    two-argument construction byte-compatible."""
+
     n_nodes: int
     devices_per_node: int = 8
+    nodes_per_pdu: int = 1
+    nodes_per_switch: int = 2
+
+    def __post_init__(self):
+        if self.nodes_per_pdu < 1 or self.nodes_per_switch < 1:
+            raise ValueError("nodes_per_pdu / nodes_per_switch must be >= 1")
 
     @property
     def n_devices(self) -> int:
@@ -64,6 +80,48 @@ class ClusterTopology:
 
     def node_of(self, device_id: int) -> int:
         return device_id // self.devices_per_node
+
+    # ------------------------------------------------------ failure domains
+    @property
+    def n_pdus(self) -> int:
+        return -(-self.n_nodes // self.nodes_per_pdu)
+
+    @property
+    def n_switches(self) -> int:
+        return -(-self.n_nodes // self.nodes_per_switch)
+
+    def pdu_of(self, device_id: int) -> int:
+        return self.node_of(device_id) // self.nodes_per_pdu
+
+    def switch_of(self, device_id: int) -> int:
+        return self.node_of(device_id) // self.nodes_per_switch
+
+    def domain_of(self, device_id: int, kind: str = "pdu") -> int:
+        """Domain index of a device under ``kind`` ('pdu' | 'switch' |
+        'node'/'rack')."""
+        if kind == "pdu":
+            return self.pdu_of(device_id)
+        if kind == "switch":
+            return self.switch_of(device_id)
+        if kind in ("node", "rack"):
+            return self.node_of(device_id)
+        raise ValueError(f"unknown domain kind {kind!r}")
+
+    def domain_nodes(self, kind: str, index: int) -> list:
+        """Node ids resident in one domain (for ``kind='node'`` the domain
+        *is* the node)."""
+        per = {"pdu": self.nodes_per_pdu, "switch": self.nodes_per_switch,
+               "node": 1, "rack": 1}.get(kind)
+        if per is None:
+            raise ValueError(f"unknown domain kind {kind!r}")
+        lo = index * per
+        return [n for n in range(lo, min(lo + per, self.n_nodes))]
+
+    def domain_devices(self, kind: str, index: int) -> list:
+        """Device ids resident in one domain, ascending."""
+        return [d for n in self.domain_nodes(kind, index)
+                for d in range(n * self.devices_per_node,
+                               (n + 1) * self.devices_per_node)]
 
 
 class DeviceView:

@@ -69,6 +69,19 @@ name                    models / used by
                         while the rest of the fleet stays clean
 ``infant_mortality``    fresh fleet with a decreasing hazard (Weibull
                         k < 1): an early failure burst that quiets down
+``pdu_brownout``        a browned-out PDU multiplies every resident
+                        device's hazard rate (topology covariates):
+                        failures concentrate in one power domain and recur
+                        — the domain-aware-policy stress case
+                        (``bench_scenarios``)
+``switch_degrade``      correlated network degrade: every node under one
+                        leaf switch sees link contention together, later
+                        restored (flaky uplink); ``bench_scenarios``
+``restart_storm``       a fleet fraction fail-stops in one tight burst and
+                        mass-rejoins after a downtime, twice — the
+                        job-restart regime where checkpoint/restart
+                        economics beat live adaptation
+                        (``bench_scenarios``)
 ======================  ====================================================
 """
 from __future__ import annotations
@@ -87,7 +100,7 @@ __all__ = [
     "FailureScenario", "Compose", "FailStop", "FailSlow", "TransientFlap",
     "NetworkDegrade", "Rejoin", "MixedFailures", "RandomFailSlow",
     "ThermalThrottleFleet", "PoissonFailures", "CorrelatedRackStorm",
-    "TimelineScenario",
+    "CorrelatedSwitchDegrade", "RestartStorm", "TimelineScenario",
     "HazardConfig", "register", "get", "names",
 ]
 
@@ -418,7 +431,7 @@ class PoissonFailures(FailureScenario):
         processes pick both the times and the victims. Draw order is fixed
         (model init, then event times in firing order, then per-event
         kind/severity), so compilation stays byte-deterministic."""
-        model = HazardModel(self.hazard, topo.n_devices, rng)
+        model = HazardModel(self.hazard, topo.n_devices, rng, topo=topo)
         fails = hazard_event_times(
             model, rng, t_start=self.t_start, t_end=self.t_end,
             mttr=self.mttr, renewal=self.renewal, max_events=self.max_events)
@@ -462,6 +475,63 @@ class CorrelatedRackStorm(FailureScenario):
                 if self.recover_after is not None:
                     yield self._ev(self.at + self.recover_after + j * self.stagger,
                                    "rejoin", d)
+
+
+@dataclass
+class CorrelatedSwitchDegrade(FailureScenario):
+    """Correlated network fault: every node under ``n_switches`` leaf
+    switches (random distinct switches unless ``switches`` pins them —
+    domain map: ``ClusterTopology.nodes_per_switch``) sees link contention
+    together in a staggered onset — the flaky-uplink signature where a
+    whole switch domain degrades at once rather than one node at a time.
+    ``recover_after`` clears the contention (uplink failed over)."""
+    at: float
+    n_switches: int = 1
+    switches: Optional[Sequence[int]] = None
+    link_scale: float = 0.35
+    stagger: float = 0.5
+    recover_after: Optional[float] = None
+
+    def events(self, topo, rng):
+        sws = (list(self.switches) if self.switches is not None
+               else [int(s) for s in
+                     rng.permutation(topo.n_switches)[: self.n_switches]])
+        for s in sws:
+            for j, node in enumerate(topo.domain_nodes("switch", s)):
+                t = self.at + j * self.stagger
+                yield self._ev(t, "net-degrade", node, self.link_scale)
+                if self.recover_after is not None:
+                    yield self._ev(
+                        self.at + self.recover_after + j * self.stagger,
+                        "net-restore", node)
+
+
+@dataclass
+class RestartStorm(FailureScenario):
+    """Job-restart storm: a seeded ``frac`` fraction of the fleet
+    fail-stops in one tight staggered burst (the mass-exit signature of a
+    job-level restart or a rolling infra intervention) and mass-rejoins
+    ``downtime`` later — optionally repeating every ``period`` seconds for
+    ``n_storms`` rounds. The scenario where restart-from-checkpoint
+    economics matter: adaptation churns through a cliff of simultaneous
+    losses that a checkpoint restore would absorb in one charge."""
+    at: float
+    frac: float = 0.25
+    downtime: float = 10.0
+    stagger: float = 0.25
+    n_storms: int = 1
+    period: float = 60.0
+
+    def events(self, topo, rng):
+        for k in range(self.n_storms):
+            t0 = self.at + k * self.period
+            n = max(1, int(round(self.frac * topo.n_devices)))
+            victims = sorted(int(d) for d in
+                             rng.permutation(topo.n_devices)[:n])
+            for j, d in enumerate(victims):
+                yield self._ev(t0 + j * self.stagger, "fail-stop", d)
+                yield self._ev(t0 + self.downtime + j * self.stagger,
+                               "rejoin", d)
 
 
 @dataclass
@@ -700,6 +770,51 @@ def _infant_mortality(span: float = 160.0,
         rate=0.0, t_end=span, mix=0.5, mttr=0.10 * span, renewal=True,
         max_events=max_events,
         hazard=HazardConfig(mttf_s=8.0 * span, shape=0.6))
+
+
+# --------------------------------- correlated-domain families (this PR)
+@register("pdu_brownout")
+def _pdu_brownout(span: float = 160.0, mix: float = 0.7,
+                  max_events: int = 64, bad_frac: float = 0.05,
+                  factor: float = 64.0) -> FailureScenario:
+    # a seeded PDU domain goes bad (``bad_frac`` is a fraction of domains
+    # with an at-least-one guarantee, so small fleets get exactly one hot
+    # rack): every resident device's memoryless hazard rate is multiplied
+    # by ``factor``, so failures concentrate inside the browned-out rack
+    # and — with renewal repairs — recur there. Mostly fail-stop (mix=0.7,
+    # the power-domain signature) over a *thin* healthy-fleet background
+    # (mttf 16 spans — pooled domain detection lives or dies on the
+    # contrast between rack rate and background rate, not on raw counts).
+    # The pooled DomainEstimator should bench the rack after two distinct
+    # resident failures, before its third device dies; repairs land in
+    # ~0.1 spans, long enough for the heartbeat to see every death.
+    return PoissonFailures(
+        rate=0.0, t_end=span, mix=mix, mttr=0.10 * span, renewal=True,
+        max_events=max_events, severity=(0.3, 0.55),
+        hazard=HazardConfig(mttf_s=16.0 * span, shape=1.0,
+                            bad_domain_frac=bad_frac,
+                            bad_domain_factor=factor, domain="pdu"))
+
+
+@register("switch_degrade")
+def _switch_degrade(span: float = 160.0, link_scale: float = 0.35,
+                    n_switches: int = 1) -> FailureScenario:
+    # a flaky leaf-switch uplink: every node under the switch degrades
+    # together in a staggered onset, restored after the failover
+    return CorrelatedSwitchDegrade(at=0.15 * span, n_switches=n_switches,
+                                   link_scale=link_scale,
+                                   stagger=0.01 * span,
+                                   recover_after=0.45 * span)
+
+
+@register("restart_storm")
+def _restart_storm(span: float = 160.0, frac: float = 0.25,
+                   n_storms: int = 2) -> FailureScenario:
+    # two job-restart storms: a quarter of the fleet mass-exits and
+    # mass-rejoins after a downtime, then it happens again
+    return RestartStorm(at=0.15 * span, frac=frac,
+                        downtime=0.06 * span, stagger=0.002 * span,
+                        n_storms=n_storms, period=0.30 * span)
 
 
 # ================================================== mined adversarial family

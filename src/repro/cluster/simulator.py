@@ -29,7 +29,7 @@ from repro.cluster.baselines import BasePolicy, PolicyDecision, make_policy
 from repro.cluster.events import Event, apply_event
 from repro.cluster.fastsim import (FastHeartbeat, FastMigrator,
                                    StageSpeedCache, make_cost_table)
-from repro.cluster.hazard import HazardEstimator
+from repro.cluster.hazard import DomainEstimator, HazardEstimator
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.workload import WorkloadGen
 from repro.core.detector.changepoint import CusumDetector, SlopeDriftDetector
@@ -62,6 +62,10 @@ class SimConfig:
     p2p_cost: float = 2.0e-4
     migrate_edge_cost: float = 2.0e-3
     devices_per_node: int = 8
+    # correlated failure domains (ClusterTopology defaults: PDU == rack,
+    # two racks per leaf switch)
+    nodes_per_pdu: int = 1
+    nodes_per_switch: int = 2
     # detection model
     failstop_stall_s: float = 4.0  # heartbeat loss -> NCCL-timeout analogue
     failslow_detect_iters: int = 2  # paper Fig. 14: detected in 2-3 iterations
@@ -125,7 +129,9 @@ class TrainingSim:
         self.cfg = cfg
         self.layer_costs = list(layer_costs) if layer_costs else [1.0] * cfg.n_layers
         self.topo = ClusterTopology(
-            math.ceil(cfg.n_devices / cfg.devices_per_node), cfg.devices_per_node)
+            math.ceil(cfg.n_devices / cfg.devices_per_node),
+            cfg.devices_per_node, nodes_per_pdu=cfg.nodes_per_pdu,
+            nodes_per_switch=cfg.nodes_per_switch)
         self.cluster = ClusterState(self.topo)
         self.plan0 = initial_plan(
             cfg.n_layers, cfg.dp, cfg.pp, cfg.tp,
@@ -135,6 +141,13 @@ class TrainingSim:
             # the §6.1 node-local-standby contract needs the physical
             # topology; explicit policy_kwargs (incl. node_of=None) win
             pk.setdefault("node_of", self.topo.node_of)
+            if pk.get("domains"):
+                # domain-aware switch: give the Scheduler the device ->
+                # failure-domain map for domain-spread standby offers
+                kind = getattr(pk["domains"], "domain", "pdu")
+                pk.setdefault(
+                    "domain_of",
+                    lambda d, _k=kind: self.topo.domain_of(d, _k))
         self.policy: BasePolicy = make_policy(
             policy_name, self.plan0, self.layer_costs, **pk)
         self.gen = WorkloadGen(cfg.seq_len, cfg.dp, cfg.n_microbatches,
@@ -169,6 +182,26 @@ class TrainingSim:
                 cfg=lc_cfg,
                 probe_fn=lambda d: self.cluster.devices[d].effective,
                 hazard=self.hazard_estimator)
+        # pooled domain-level detection (default-off ``domains`` switch):
+        # the estimator aggregates the lifecycle's FailureHistory by
+        # failure domain — whole-domain quarantine + domain-spread risk.
+        # ``domains`` implies ``hazard`` implies ``lifecycle`` (policy
+        # __post_init__), so the manager above always exists here.
+        dom_cfg = getattr(self.policy, "domains", None)
+        self.domain_estimator: Optional[DomainEstimator] = (
+            DomainEstimator(dom_cfg) if dom_cfg else None)
+        self._domain_members: Optional[dict] = None
+        # per-domain time of the last quarantine-supporting evidence: a
+        # benched domain stays benched for ``hold_s`` after this (benching
+        # works precisely by silencing the evidence stream, so a purely
+        # window-functional quarantine would flap)
+        self._domain_trips: dict = {}
+        if dom_cfg:
+            members: dict = {}
+            for d in range(self.topo.n_devices):
+                members.setdefault(
+                    self.topo.domain_of(d, dom_cfg.domain), []).append(d)
+            self._domain_members = members
         # validation doubles as a fail-stop path (lifecycle gate): a
         # validation pass reports devices it measured dead instead of
         # leaving them to the heartbeat timeout
@@ -423,6 +456,40 @@ class TrainingSim:
         r = m.run()
         return r.makespan if r.status == "ok" else float("inf")
 
+    def _domain_view(self, now: float):
+        """Pooled domain-level failure view at ``now``: the set of devices
+        resident in quarantined domains, plus per-device pooled risk for
+        every elevated (but not necessarily quarantined) domain. The view is
+        functional in the lifecycle's histories and ``now`` except for the
+        quarantine hold: once a domain trips, it stays benched for
+        ``hold_s`` after its last supporting evidence (``_domain_trips``),
+        because benching silences the very evidence stream that tripped it
+        — without the hold the quarantine flaps, and every flap is a full
+        replan with migrations. Both engines run this identically from the
+        shared step loop, so the extra state cannot diverge them."""
+        est = self.domain_estimator
+        cfg = est.cfg
+        hist = self.lifecycle.histories
+        quarantined: set = set()
+        risk: dict = {}
+        for dom in sorted(self._domain_members):
+            members = self._domain_members[dom]
+            hs = [hist[d] for d in members if d in hist]
+            held = (dom in self._domain_trips
+                    and now < self._domain_trips[dom] + cfg.hold_s)
+            if not hs and not held:
+                continue
+            r = est.risk(hs, now) if hs else 1.0
+            if cfg.quarantine and hs and est.should_quarantine(hs, now):
+                self._domain_trips[dom] = now
+                held = True
+            if cfg.quarantine and held:
+                quarantined.update(members)
+            if cfg.spread and r > 1.0:
+                for d in members:
+                    risk[d] = r
+        return frozenset(quarantined), risk
+
     def _rebaseline_scale(self, old_decision) -> Optional[float]:
         """Predicted expected-time ratio (new decision / old decision) for
         the ramp-aware baseline carry. Only computed when the Detector will
@@ -480,7 +547,24 @@ class TrainingSim:
                     self.known_speeds[d] = 0.0
                     self._belief_dirty = True
             events.append(("fail-stop-detected", rep.devices))
-            self.now += self.cfg.failstop_stall_s
+            # the stall models an NCCL timeout: only a rank inside an
+            # active communicator can hang a collective. A death confined
+            # to warm standbys (benched rack, hazard-quarantined device) is
+            # detected out-of-band by the heartbeat — belief flips above,
+            # but training never stalls. Membership gating rides the
+            # domains= switch: with it off, every fail-stop charges the
+            # stall exactly as before (old sweep cells stay byte-identical).
+            stall = True
+            if self.domain_estimator is not None:
+                active = None
+                if self._decision is not None and not self._decision.aborted:
+                    active = frozenset(
+                        d for r in self._decision.plan.replicas
+                        for d in r.devices)
+                stall = (active is None
+                         or any(d in active for d in rep.devices))
+            if stall:
+                self.now += self.cfg.failstop_stall_s
         # fail-slow backlog promoted after detect latency
         still = []
         for d, speed, at in self._failslow_backlog:
@@ -511,10 +595,34 @@ class TrainingSim:
             # the hazard-blind planner path stays byte-identical)
             risk = (self.lifecycle.risk_scores(self.now)
                     if self.lifecycle is not None else {})
+            if self.domain_estimator is not None:
+                # pooled domain view: a hot domain's residents are excluded
+                # wholesale (bench the rack before its third device fails)
+                # and carry the pooled risk into placement tie-breaks
+                dq, drisk = self._domain_view(self.now)
+                if dq:
+                    excluded = frozenset(excluded) | dq
+                if drisk:
+                    risk = dict(risk)
+                    for d, rv in drisk.items():
+                        if rv > risk.get(d, 1.0):
+                            risk[d] = rv
             self._decision = self.policy.decide(self.known_speeds,
                                                 changed=changed,
                                                 excluded=excluded,
                                                 risk=risk or None)
+            if (self._decision.aborted and self.domain_estimator is not None
+                    and dq):
+                # a bench is advisory, never fatal: if excluding the hot
+                # domain leaves no feasible plan (its capacity is needed to
+                # cover unrelated concurrent failures), fall back to the
+                # per-device exclusion set and keep the session alive
+                excluded = frozenset(excluded) - dq
+                self._decision = self.policy.decide(self.known_speeds,
+                                                    changed=changed,
+                                                    excluded=excluded,
+                                                    risk=risk or None)
+                events.append(("bench-waived", tuple(sorted(dq))))
             self._belief_dirty = False
             if self._decision.reconfig_overhead_s:
                 self.now += self._decision.reconfig_overhead_s

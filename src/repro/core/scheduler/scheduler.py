@@ -134,6 +134,14 @@ class Scheduler:
     # (ClusterState.node_of). None => plan-only callers keep the whole-pool
     # legacy behaviour (no topology to filter by).
     node_of: Optional[object] = None
+    # correlated-failure-domain view (device -> domain index; a callable or
+    # an indexable array, wired from ClusterTopology.pdu_of & co. by the
+    # domain-aware policy switch): among the node-local standbys a group may
+    # pull in, offers are stably ordered toward domains with *fewer* failed
+    # devices, so backfill straddles domains instead of refilling from the
+    # rack that is busy dying. None (the default) keeps the legacy offer
+    # order — byte-identical planning.
+    domain_of: Optional[object] = None
     # nonuniform-TP adaptation axis (NTPConfig; ``True`` for defaults;
     # default OFF = exclusion-only Eq. 3/4, byte-identical legacy planning)
     ntp: Optional[object] = None
@@ -198,6 +206,14 @@ class Scheduler:
         t0 = time.perf_counter() if self.measure_overhead else 0.0
         failed = (set(failed) | {d for d, v in speeds.items() if v <= 0.0}
                   | set(quarantined))
+        # per-domain failed-device counts for domain-spread standby offers
+        # (None when no domain view is wired: legacy offer order)
+        dom_fail = None
+        if self.domain_of is not None and failed:
+            dom_fail = {}
+            for d in failed:
+                dom = self._domain(d)
+                dom_fail[dom] = dom_fail.get(dom, 0) + 1
         notes = []
         if quarantined:
             notes.append(f"quarantined (excluded): {sorted(quarantined)}")
@@ -232,7 +248,8 @@ class Scheduler:
                     continue
                 # pull node-local standbys into the candidate pool (§6.1 —
                 # only standbys co-located with the group's node(s) qualify)
-                offered = self._local_standbys(st.devices, standby_pool)
+                offered = self._local_standbys(st.devices, standby_pool,
+                                               dom_fail)
                 pool = list(st.devices) + offered
                 rec: TPReconfig = reconfigure_tp_group(
                     pool, speeds, k_min=self.k_min, failed=failed,
@@ -326,14 +343,25 @@ class Scheduler:
         nf = self.node_of
         return int(nf(device)) if callable(nf) else int(nf[device])
 
-    def _local_standbys(self, group, standby_pool) -> list:
+    def _domain(self, device) -> int:
+        df = self.domain_of
+        return int(df(device)) if callable(df) else int(df[device])
+
+    def _local_standbys(self, group, standby_pool, dom_fail=None) -> list:
         """§6.1 node-local standby contract: a group may only pull in
         standbys co-located with its node(s). Without a topology view
-        (node_of=None, plan-only callers) the whole pool qualifies."""
+        (node_of=None, plan-only callers) the whole pool qualifies.
+        ``dom_fail`` (per-domain failed counts, domain-aware switch only)
+        stably reorders the qualifying offers toward less-failed domains —
+        ties, and the no-domain-view path, keep the legacy pool order."""
         if self.node_of is None or not standby_pool:
-            return list(standby_pool)
-        nodes = {self._node(d) for d in group}
-        return [d for d in standby_pool if self._node(d) in nodes]
+            offers = list(standby_pool)
+        else:
+            nodes = {self._node(d) for d in group}
+            offers = [d for d in standby_pool if self._node(d) in nodes]
+        if dom_fail:
+            offers.sort(key=lambda d: dom_fail.get(self._domain(d), 0))
+        return offers
 
     def _worth_it(self, old_parts, new_parts, stage_speed, notes) -> bool:
         from repro.core.scheduler.repartition import partition_bottleneck

@@ -71,6 +71,119 @@ def test_extra_payload(tmp_path):
     assert extra["data_cursor"] == 123
 
 
+# ------------------------------------------- crash-consistency properties
+# Fault injection at every write the save path performs: whatever instant
+# the process dies, the latest *committed* checkpoint must stay restorable
+# bit-for-bit and `latest_step` must never name the torn write.
+class _Boom(RuntimeError):
+    pass
+
+
+@pytest.mark.parametrize("crash_leaf", [0, 1, 2])
+def test_crash_at_any_leaf_write_leaves_no_commit(tmp_path, monkeypatch,
+                                                  crash_leaf):
+    s = _state()
+    save_checkpoint(tmp_path, s, 5)
+    calls = {"n": 0}
+    real_save = np.save
+
+    def dying_save(path, arr, *a, **kw):
+        if calls["n"] == crash_leaf:
+            raise _Boom(f"killed at leaf {crash_leaf}")
+        calls["n"] += 1
+        return real_save(path, arr, *a, **kw)
+
+    monkeypatch.setattr(np, "save", dying_save)
+    with pytest.raises(_Boom):
+        save_checkpoint(tmp_path, _state(seed=1), 10)
+    monkeypatch.undo()
+    # the torn write never became a committed step directory
+    assert not (tmp_path / "step_000000010").exists()
+    assert not (tmp_path / "step_000000010.tmp" / "COMMIT").exists()
+    assert latest_step(tmp_path) == 5
+    r, step, _ = restore_checkpoint(tmp_path, target=s)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the crashed step's stale .tmp does not poison the next save
+    save_checkpoint(tmp_path, _state(seed=2), 10)
+    assert latest_step(tmp_path) == 10
+
+
+def test_crash_at_commit_marker_write(tmp_path, monkeypatch):
+    """Death between the manifest write and the COMMIT marker: everything is
+    on disk except the one byte that makes it real — restore must still fall
+    back to the previous committed step."""
+    s = _state()
+    save_checkpoint(tmp_path, s, 5)
+    real_write = Path.write_text
+
+    def dying_write(self, text, *a, **kw):
+        if self.name == "COMMIT":
+            raise _Boom("killed at commit")
+        return real_write(self, text, *a, **kw)
+
+    monkeypatch.setattr(Path, "write_text", dying_write)
+    with pytest.raises(_Boom):
+        save_checkpoint(tmp_path, _state(seed=1), 10)
+    monkeypatch.undo()
+    # the rename never ran: the full payload sits in .tmp, invisible
+    assert (tmp_path / "step_000000010.tmp" / "MANIFEST.json").exists()
+    assert not (tmp_path / "step_000000010").exists()
+    assert latest_step(tmp_path) == 5
+    _, step, _ = restore_checkpoint(tmp_path, target=s)
+    assert step == 5
+
+
+def test_gc_never_deletes_latest_committed(tmp_path):
+    """Pruning property: under `keep=1` amid uncommitted/torn debris with
+    *higher* step numbers, the latest committed step always survives and the
+    debris is neither promoted nor counted against the keep budget."""
+    s = _state()
+    for step in (1, 2, 3):
+        save_checkpoint(tmp_path, s, step, keep=1)
+        # torn higher-numbered neighbors around every save
+        torn = tmp_path / f"step_{step + 100:09d}"
+        torn.mkdir()
+        (torn / "MANIFEST.json").write_text(json.dumps({"n_leaves": 0}))
+        stale = tmp_path / f"step_{step + 200:09d}.tmp"
+        stale.mkdir()
+        assert latest_step(tmp_path) == step
+        _, got, _ = restore_checkpoint(tmp_path, target=s)
+        assert got == step
+    committed = [p.name for p in tmp_path.glob("step_*")
+                 if (p / "COMMIT").exists()]
+    assert committed == ["step_000000003"]
+
+
+def test_save_plan_a_restore_plan_b_bit_exact(tmp_path):
+    """Reshard-on-load: a checkpoint written under one plan's shardings is
+    restored straight into a *different* plan's shardings (Fig. 8b recovery
+    into the post-adaptation layout) — placement changes, bits do not."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    plan_a = {"params": {"w": NamedSharding(mesh, P("x", None)),
+                         "b": NamedSharding(mesh, P(None))},
+              "opt": {"m": NamedSharding(mesh, P(None, "x"))},
+              "step": None}
+    plan_b = {"params": {"w": NamedSharding(mesh, P(None, "x")),
+                         "b": NamedSharding(mesh, P("x"))},
+              "opt": {"m": NamedSharding(mesh, P("x", None))},
+              "step": None}
+    s = _state()
+    placed = jax.tree.map(
+        lambda leaf, sh: jax.device_put(leaf, sh) if sh is not None else leaf,
+        s, plan_a)
+    save_checkpoint(tmp_path, placed, 7)
+    r, step, _ = restore_checkpoint(tmp_path, target=s, shardings=plan_b)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert r["params"]["w"].sharding.spec == P(None, "x")
+    assert r["opt"]["m"].sharding.spec == P("x", None)
+
+
 # -------------------------------------------------------------- Fig. 8
 def test_transfer_plan_layer_moves():
     cfg = reduced(get_arch("qwen3-8b"), n_layers=8)

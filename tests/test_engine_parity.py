@@ -40,19 +40,38 @@ SCENARIOS = {
     "adversarial_1": dict(span=1.0),
     "adversarial_2": dict(span=1.0),
     "adversarial_3": dict(span=1.0),
+    # correlated failure-domain families (PR 9), spans shrunk to land the
+    # correlated bursts inside the ~1.3 simulated seconds 40 iterations
+    # cover at this scale: a browned-out rack's hazard-driven fail-stop
+    # recurrence and an orchestrator restart wave with staggered rejoins
+    "pdu_brownout": dict(span=2.0, max_events=8),
+    "restart_storm": dict(span=5.0),
+    "switch_degrade": dict(span=3.0),
 }
 POLICIES = {
     "resihp": {"plan_overhead_fixed": 0.25},
     "resihp+ntp": {"plan_overhead_fixed": 0.25, "ntp": True},
+    # pooled domain quarantine + hold + domain-spread risk + the abort
+    # fallback (bench waived when it would kill the session) all ride the
+    # shared step loop — parity must hold with the whole stack on
+    "resihp+dom": {"plan_overhead_fixed": 0.25, "domains": True},
     "recycle+": {},
     "oobleck+": {},
 }
+# policy-label suffixes that select a ResiHPPolicy switch, not a policy name
+_LABEL_SUFFIXES = ("+ntp", "+dom")
+
+
+def _policy_name(label: str) -> str:
+    for suf in _LABEL_SUFFIXES:
+        if label.endswith(suf):
+            return label[: -len(suf)]
+    return label
 
 
 def _run(engine, scenario, policy):
-    name = policy.split("+ntp")[0] if policy.endswith("+ntp") else policy
-    sim = TrainingSim(name, CFG, policy_kwargs=POLICIES[policy],
-                      engine=engine)
+    sim = TrainingSim(_policy_name(policy), CFG,
+                      policy_kwargs=POLICIES[policy], engine=engine)
     sim.apply_scenario(scenarios.get(scenario, **SCENARIOS[scenario]))
     sim.run(ITERS, stop_on_abort=False)
     return sim
@@ -81,6 +100,31 @@ def test_engines_produce_identical_iter_records(scenario, policy):
     assert a.avg_throughput(skip=2) == b.avg_throughput(skip=2)
     assert ([ev.as_tuple() for ev in a.event_log]
             == [ev.as_tuple() for ev in b.event_log])
+
+
+@pytest.mark.parametrize("scenario", ("pdu_brownout", "restart_storm"))
+def test_domain_scenarios_parity_on_forced_array_path(scenario):
+    """The fast engine's vectorized dispatch normally engages only past
+    ``VEC_BATCH_MIN`` chunks per round; forcing ``vec_batch_min=1`` drives
+    every round of the correlated-domain scenarios through the array path,
+    so the batched kernels (not the tuned scalar fallback) are what parity
+    certifies here."""
+    import functools
+
+    from repro.cluster.fastsim import FastMigrator
+
+    sims = []
+    for forced in (False, True):
+        sim = TrainingSim("resihp", CFG, engine="fast",
+                          policy_kwargs=POLICIES["resihp+dom"])
+        if forced:
+            sim._migrator_cls = functools.partial(FastMigrator,
+                                                  vec_batch_min=1)
+        sim.apply_scenario(scenarios.get(scenario, **SCENARIOS[scenario]))
+        sim.run(ITERS, stop_on_abort=False)
+        sims.append(sim)
+    assert _stream(sims[0]) == _stream(sims[1])
+    assert sims[0].aborted == sims[1].aborted
 
 
 def test_default_engine_is_fast():

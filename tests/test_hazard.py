@@ -432,3 +432,69 @@ def test_bench_aging_fleet_risk_aware_beats_hazard_blind():
     # quarantine is a flapper that happened to cross the count threshold)
     assert hz["lifecycle"]["quarantines"] > lc["lifecycle"]["quarantines"]
     assert hz["lifecycle"]["rejoins_deferred"] > lc["lifecycle"]["rejoins_deferred"]
+
+
+# ==================================================== the pooled estimator
+def _dom_hist(device, stops=(), slows=()):
+    from repro.core.detector.lifecycle import FailureHistory
+
+    return FailureHistory(device, fail_stops=list(stops),
+                          fail_slows=list(slows))
+
+
+def test_domain_estimator_fires_before_third_device_fails():
+    """Two distinct residents of one rack failing inside the window push the
+    pooled risk past threshold — the rack is benched before any third
+    device dies. Defaults: risk = 1 + n/0.5, threshold 4 => two pooled
+    events from >= 2 distinct devices trip it."""
+    from repro.cluster.hazard import DomainEstimator, DomainPolicyConfig
+
+    est = DomainEstimator(DomainPolicyConfig())
+    rack = [_dom_hist(8, stops=[10.0]), _dom_hist(9, stops=[40.0]),
+            _dom_hist(10), _dom_hist(11)]
+    assert est.risk(rack, 50.0) == 5.0
+    assert est.should_quarantine(rack, 50.0)
+    # the same evidence aged past the window releases the domain
+    assert not est.should_quarantine(rack, 110.0)
+
+
+def test_domain_estimator_silent_when_failures_spread_across_domains():
+    """The same two failures on devices of *different* racks never
+    quarantine either rack: each pools one event (risk 3 < threshold 4,
+    one distinct device < min_devices 2). Correlation — not count — is the
+    signal."""
+    from repro.cluster.hazard import DomainEstimator, DomainPolicyConfig
+
+    est = DomainEstimator(DomainPolicyConfig())
+    rack_a = [_dom_hist(0, stops=[10.0]), _dom_hist(1), _dom_hist(2)]
+    rack_b = [_dom_hist(8, stops=[40.0]), _dom_hist(9), _dom_hist(10)]
+    assert not est.should_quarantine(rack_a, 50.0)
+    assert not est.should_quarantine(rack_b, 50.0)
+
+
+def test_domain_estimator_one_repeat_offender_is_not_a_rack_problem():
+    """Three failures on ONE resident keep the pooled risk elevated but
+    never quarantine the rack (min_devices=2): a single lemon is the
+    per-device estimator's job; benching its seven healthy neighbours
+    would be pure loss."""
+    from repro.cluster.hazard import DomainEstimator, DomainPolicyConfig
+
+    est = DomainEstimator(DomainPolicyConfig())
+    rack = [_dom_hist(8, stops=[10.0, 20.0, 30.0]), _dom_hist(9), _dom_hist(10)]
+    assert est.risk(rack, 35.0) == 7.0  # well past threshold...
+    assert not est.should_quarantine(rack, 35.0)  # ...but 1 device only
+
+
+def test_domain_estimator_reduces_to_hazard_estimator_on_single_device():
+    """On a one-device domain the pooled risk equals the per-device
+    estimator's risk for the same history — same prior, same window, same
+    fail-stop+fail-slow evidence — so domain pooling is a strict
+    generalization, not a second calibration to keep in sync."""
+    from repro.cluster.hazard import (DomainEstimator, DomainPolicyConfig,
+                                      HazardEstimator, HazardPolicyConfig)
+
+    h = _dom_hist(3, stops=[5.0, 30.0], slows=[(42.0, 0.4)])
+    dom = DomainEstimator(DomainPolicyConfig())
+    per = HazardEstimator(HazardPolicyConfig())
+    for now in (6.0, 31.0, 45.0, 70.0, 200.0):
+        assert dom.risk([h], now) == per.risk(h, now)

@@ -110,3 +110,24 @@ def test_multi_scale_merge_is_worker_count_invariant():
     cells = build_grid(**MULTI_SCALE_KW)
     serial_out = sweep(cells, workers=1)
     assert _dumps(sweep(cells, workers=2)) == _dumps(serial_out)
+
+
+def test_new_grid_axes_leave_old_cells_byte_identical():
+    """Growing the sweep grid (PR 9 added three scenario families and the
+    resihp+dom policy column) must not perturb a single byte of the cells
+    that existed before: recompute pre-existing cells at the checked-in
+    artifact's coordinates and compare against results/scenarios_sweep.json
+    exactly. A diff here means a new registration leaked into an old cell's
+    RNG stream or decision path."""
+    from pathlib import Path
+
+    from benchmarks.bench_scenarios import run
+
+    artifact = Path(__file__).parent.parent / "results/scenarios_sweep.json"
+    checked_in = json.loads(artifact.read_text())
+    # one plain cell and one with the full lifecycle+hazard stack on — the
+    # two paths a domain-layer leak could plausibly touch
+    for policy in ("resihp", "resihp+hz"):
+        fresh = run("llama2-13b", "rack_storm", policy, iters=160)
+        pinned = checked_in["llama2-13b/rack_storm"][policy]
+        assert _dumps(json.loads(_dumps(fresh))) == _dumps(pinned), policy
