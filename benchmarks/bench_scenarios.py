@@ -93,9 +93,21 @@ POLICIES = {
     # switch): pooled domain quarantine + domain-spread placement + restart
     # economics, against resihp+hz as the domain-blind risk-aware reference
     "resihp+dom": ("resihp", {"domains": True, "plan_overhead_model": True}),
+    # unified credit score (default-off ResiHPPolicy(credit=) switch): one
+    # fitted health scalar behind quarantine bands, banded/async admission,
+    # credit-gated NTP shrink retention, credit-aware placement and
+    # restart weighting — the fitted policy measured against *every*
+    # hand-tuned resihp column above (vs_best in derive_rows)
+    "resihp+credit": ("resihp", {"credit": True, "ntp": True,
+                                 "plan_overhead_model": True}),
     "recycle+": ("recycle+", {}),
     "oobleck+": ("oobleck+", {}),
 }
+
+# the hand-tuned resihp policy columns the fitted credit row must dominate
+# (tools/fit_credit.py's per-family baseline = the best of these)
+CREDIT_BASELINES = ("resihp", "resihp+lc", "resihp+hz", "resihp+ntp",
+                    "resihp+dom")
 
 
 def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
@@ -121,6 +133,10 @@ def run(model: str, scenario_name: str, policy: str, *, iters=160, seed=0,
         out["events"] = trace.as_tuples()
     if sim.lifecycle is not None:
         out["lifecycle"] = sim.lifecycle.stats.as_dict()
+    if getattr(sim, "credit_model", None) is not None:
+        # separate from the lifecycle dict: LifecycleStats feeds every
+        # pre-credit sweep cell's JSON and must not grow fields
+        out["credit"] = sim.credit_model.stats.as_dict()
     return out
 
 
@@ -159,6 +175,20 @@ def derive_rows(key_prefix: str, rs: dict) -> list:
             derived = (f"quar={lc.get('quarantines', 0)}"
                        f" {sess}"
                        f" vs_hz={vs}")
+        elif p == "resihp+credit":
+            # the unified-scalar comparison: the fitted credit policy vs the
+            # best hand-tuned resihp column on this scenario (>=1.00x = one
+            # fitted scalar matches per-family threshold tuning)
+            cr = r.get("credit", {})
+            best = max((rs[b]["session_throughput"]
+                        for b in CREDIT_BASELINES if b in rs), default=0.0)
+            vs = (f"{r['session_throughput'] / best:.2f}x" if best > 0
+                  else "n/a")
+            derived = (f"direct={cr.get('direct_admits', 0)}"
+                       f" async={cr.get('async_admissions', 0)}"
+                       f" quar={cr.get('quarantines', 0)}"
+                       f" {sess}"
+                       f" vs_best={vs}")
         elif p == "resihp+ntp":
             # the adaptation-axis comparison: shrink-shard vs exclusion-only
             # planning on the same scenario (>1.00x = NTP wins)
@@ -185,18 +215,36 @@ HAZARD_SCENARIOS = ("aging_fleet", "lemon_devices", "infant_mortality",
                     "pdu_brownout")
 
 
-def main(quick=False, engine="fast", full=False):
+def main(quick=False, engine="fast", full=False, scales=None, iters=None):
+    """Serial scenario sweep. ``scales`` is an optional list of Table-3
+    parallelism presets (``None`` = the model's native one) reusing the
+    parallel orchestrator's plumbing: cells run via ``run(scale=...)`` and
+    keys gain an ``@scale`` level (``@native`` for None) only when the grid
+    actually spans more than one scale — a single-scale sweep's keys stay
+    byte-identical to the pre-axis artifact. ``iters`` overrides the
+    quick/full iteration count (hazard families included)."""
+    from benchmarks.common import TABLE3
+
+    for s in scales or ():
+        assert s is None or s in TABLE3, (s, sorted(TABLE3))
+    scales = tuple(scales) if scales else (None,)
+    multi_scale = len(set(scales)) > 1
     models = ["llama2-13b"] if quick else ["llama2-13b", "llama2-30b"]
-    iters = 80 if quick else 160
+    default_iters = 80 if quick else 160
     out, rows = {}, []
     for model in models:
-        for sc in SWEEP:
-            sc_iters = 160 if sc in HAZARD_SCENARIOS else iters
-            rs = {p: run(model, sc, p, iters=sc_iters, engine=engine,
-                         full=full)
-                  for p in POLICIES}
-            out[f"{model}/{sc}"] = rs
-            rows += derive_rows(f"scenarios/{model}/{sc}", rs)
+        for scale in scales:
+            for sc in SWEEP:
+                sc_iters = iters if iters is not None else (
+                    160 if sc in HAZARD_SCENARIOS else default_iters)
+                rs = {p: run(model, sc, p, iters=sc_iters, engine=engine,
+                             scale=scale, full=full)
+                      for p in POLICIES}
+                key = f"{model}/{sc}"
+                if multi_scale:
+                    key = f"{key}@{scale or 'native'}"
+                out[key] = rs
+                rows += derive_rows(f"scenarios/{key}", rs)
     write_result("scenarios_sweep", out)
     return rows
 
@@ -212,5 +260,17 @@ if __name__ == "__main__":
     ap.add_argument("--full", action="store_true",
                     help="keep per-cell event timelines in the JSON "
                          "(large); default keeps summary rows only")
+    ap.add_argument("--scales", type=str, default=None,
+                    help="comma-separated Table-3 scale presets, e.g. "
+                         "'native,1k,16k' — same plumbing as sweep.py "
+                         "(default: native only, no @scale key level)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="override the per-cell iteration count "
+                         "(hazard families included)")
     args = ap.parse_args()
-    emit(main(quick=args.quick, engine=args.engine, full=args.full))
+    scales = None
+    if args.scales:
+        scales = [None if s == "native" else s
+                  for s in args.scales.split(",")]
+    emit(main(quick=args.quick, engine=args.engine, full=args.full,
+              scales=scales, iters=args.iters))

@@ -100,11 +100,14 @@ class BasePolicy:
         return min(vals) if vals else 0.0
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset(), risk=None) -> PolicyDecision:
+               excluded=frozenset(), risk=None,
+               credit=None) -> PolicyDecision:
         """``excluded``: lifecycle-quarantined devices; ``risk``: per-device
-        hazard scores from the lifecycle hazard estimator. Only policies with
-        a failure-lifecycle story (ResiHP) act on either — baselines ignore
-        them, mirroring their lack of flap/hazard memory (§3 limitations)."""
+        hazard scores from the lifecycle hazard estimator; ``credit``:
+        per-device unified credit scores (supersede ``risk`` when present).
+        Only policies with a failure-lifecycle story (ResiHP) act on any of
+        them — baselines ignore them, mirroring their lack of flap/hazard
+        memory (§3 limitations)."""
         raise NotImplementedError
 
 
@@ -120,7 +123,8 @@ class ReCyclePolicy(BasePolicy):
             self.name = "recycle+"
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset(), risk=None) -> PolicyDecision:
+               excluded=frozenset(), risk=None,
+               credit=None) -> PolicyDecision:
         plan = self.plan0
         dead, stage_speeds = [], {}
         eff = dict(speeds)
@@ -170,7 +174,8 @@ class OobleckPolicy(BasePolicy):
             self.name = "oobleck+"
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset(), risk=None) -> PolicyDecision:
+               excluded=frozenset(), risk=None,
+               credit=None) -> PolicyDecision:
         plan0 = self.plan0
         pp = plan0.replicas[0].pp
         lost = sum(1 for d in plan0.devices if speeds.get(d, 1.0) <= 0.0)
@@ -237,7 +242,8 @@ class GreyhoundPolicy(BasePolicy):
     handles_failslow: bool = True
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset(), risk=None) -> PolicyDecision:
+               excluded=frozenset(), risk=None,
+               credit=None) -> PolicyDecision:
         plan = self.plan0
         pp = plan.replicas[0].pp
         stage_speeds, dead = {}, []
@@ -272,7 +278,8 @@ class AdaptraPolicy(BasePolicy):
     compute_recovery: float = 0.25  # ZB bubble-filling hides a bit of compute
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset(), risk=None) -> PolicyDecision:
+               excluded=frozenset(), risk=None,
+               credit=None) -> PolicyDecision:
         plan = self.plan0
         stage_speeds, dead = {}, []
         for r, rep in enumerate(plan.replicas):
@@ -337,6 +344,16 @@ class ResiHPPolicy(BasePolicy):
     # ``domains`` turns the default hazard (and therefore lifecycle)
     # switch on if it was off.
     domains: Optional[object] = None
+    # unified device credit (CreditConfig; ``True`` loads the fitted weights
+    # from src/repro/configs/credit_fitted.json; default OFF): one learned
+    # health scalar replaces the four hand-thresholded signals — quarantine
+    # entry/backoff and probe admission key on credit bands, placement
+    # tie-breaks take the credit vector (superseding device_risk), NTP
+    # shrink-shard retention is credit-gated, and the restart-vs-adapt
+    # decision weighs the plan's aggregate credit. The model reads the
+    # hazard estimator's windowed risk, so enabling ``credit`` turns the
+    # default hazard (and therefore lifecycle) switch on if it was off.
+    credit: Optional[object] = None
     # physical topology (device -> node; TrainingSim wires topo.node_of) so
     # the Scheduler honors the §6.1 node-local-standby contract. None =>
     # plan-only use without a topology, whole-pool standby offers.
@@ -369,6 +386,14 @@ class ResiHPPolicy(BasePolicy):
             if not self.hazard:
                 self.hazard = True  # pooled detection rides on the same
                 # FailureHistory evidence the per-device estimator keeps
+        if self.credit is True:
+            from repro.core.detector.credit import fitted_credit_config
+
+            self.credit = fitted_credit_config()
+        if self.credit and not self.hazard:
+            # the credit model's risk_excess signal is the hazard
+            # estimator's windowed score
+            self.hazard = True
         if self.hazard is True:
             from repro.cluster.hazard import HazardPolicyConfig
 
@@ -390,6 +415,7 @@ class ResiHPPolicy(BasePolicy):
                 enable_selective=self.enable_selective,
                 enable_repartition=self.enable_repartition,
                 ntp=self.ntp,
+                ntp_min_credit=(self.credit.ntp_band if self.credit else 0.0),
                 node_of=self.node_of,
                 domain_of=self.domain_of,
                 # effective speeds are normalized against the healthy plan's
@@ -404,14 +430,16 @@ class ResiHPPolicy(BasePolicy):
             )
 
     def decide(self, speeds, *, changed: bool,
-               excluded=frozenset(), risk=None) -> PolicyDecision:
+               excluded=frozenset(), risk=None,
+               credit=None) -> PolicyDecision:
         failed = {d for d, v in speeds.items() if v <= 0.0}
         # quarantine exclusion is owned by Scheduler.adapt (it unions
         # quarantined into failed and records the note); risk flows through
         # to the placement tie-breaks (risk-aware planning, hazard switch)
+        # and credit supersedes it (unified-credit switch)
         ad = self.scheduler.adapt(self.plan0, speeds, failed=failed,
                                   quarantined=frozenset(excluded),
-                                  device_risk=risk)
+                                  device_risk=risk, device_credit=credit)
         overhead = 0.0
         if changed:
             # layer-transfer volume: layers each stage must *fetch* relative
@@ -448,9 +476,19 @@ class ResiHPPolicy(BasePolicy):
             # comparison: at equal cost live adaptation wins (no lost
             # iterations to replay outside the model's expectation).
             restart_s = self.domains.restart.restart_cost_s()
-            if restart_s < overhead:
+            threshold = overhead
+            if credit and self.credit is not None \
+                    and getattr(self.credit, "restart_weighting", False):
+                # aggregate group credit weighs the restart-vs-adapt call: a
+                # low-credit plan is likely interrupted again before the
+                # restored session repays the restore, so the live-adaptation
+                # threshold is discounted by the plan's mean credit
+                vals = [credit.get(d, 1.0) for d in ad.plan.devices]
+                if vals:
+                    threshold = overhead * (sum(vals) / len(vals))
+            if restart_s < threshold:
                 notes.insert(0, "restart-from-checkpoint: "
-                                f"{restart_s:.3f}s < live {overhead:.3f}s")
+                                f"{restart_s:.3f}s < live {threshold:.3f}s")
                 overhead = restart_s
         self._prev_plan = ad.plan
         return PolicyDecision(

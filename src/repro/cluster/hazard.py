@@ -266,6 +266,14 @@ class HazardPolicyConfig:
     window_s: float = 60.0
     quarantine: bool = True
     planning: bool = True
+    # per-device MTTF priors (default None => the fleet-wide prior for
+    # everyone, byte-identical to the pre-prior estimator): a tuple of
+    # ``(device_id, mttf_s)`` pairs, fit offline by
+    # ``tools/fit_credit.py --priors`` from observed sweep histories. A
+    # device with a fitted MTTF shorter than ``prior_time_s`` scores
+    # proportionally riskier *before* any fresh in-session evidence — the
+    # fleet's known lemons start on the back foot.
+    priors: Optional[tuple] = None
 
     def __post_init__(self):
         if self.prior_failures <= 0 or self.prior_time_s <= 0:
@@ -275,6 +283,17 @@ class HazardPolicyConfig:
                              "quarantines every rejoining device)")
         if self.window_s <= 0:
             raise ValueError("window_s must be > 0")
+        if self.priors is not None:
+            norm = []
+            for item in (self.priors.items()
+                         if isinstance(self.priors, dict) else self.priors):
+                d, mttf = item
+                if mttf <= 0:
+                    raise ValueError(
+                        f"per-device MTTF prior must be > 0 (device {d})")
+                norm.append((int(d), float(mttf)))
+            # frozen dataclass: normalize to a canonical hashable form
+            object.__setattr__(self, "priors", tuple(sorted(norm)))
 
 
 class HazardEstimator:
@@ -285,10 +304,21 @@ class HazardEstimator:
 
     def __init__(self, cfg: HazardPolicyConfig):
         self.cfg = cfg
+        # device -> fitted MTTF (empty when no per-device priors are set)
+        self._prior_mttf = dict(cfg.priors or ())
 
     @property
     def prior_rate(self) -> float:
         return self.cfg.prior_failures / self.cfg.prior_time_s
+
+    def _prior_factor(self, history) -> float:
+        """Per-device prior multiplier on the risk score: the fleet prior
+        exposure over the device's fitted MTTF (1.0 when no prior is set —
+        the exposure-free score is untouched)."""
+        if not self._prior_mttf or history is None:
+            return 1.0
+        mttf = self._prior_mttf.get(history.device)
+        return self.cfg.prior_time_s / mttf if mttf else 1.0
 
     def _recent_failures(self, history, now: float) -> int:
         """Failures inside the recency window — fail-stops *and* fail-slows:
@@ -317,8 +347,13 @@ class HazardEstimator:
         (or one whose burst aged out of the window) scores 1.0, never below,
         and each in-window failure adds ``1/prior_failures``. Exposure-free
         by construction: the score depends only on recent failure count, not
-        on when in the session it is evaluated."""
-        return 1.0 + self._recent_failures(history, now) / self.cfg.prior_failures
+        on when in the session it is evaluated. With per-device MTTF priors
+        (``cfg.priors``) the score is further multiplied by
+        ``prior_time_s / mttf_device`` — a fitted lemon scores above 1.0
+        even before fresh evidence."""
+        base = (1.0 + self._recent_failures(history, now)
+                / self.cfg.prior_failures)
+        return base * self._prior_factor(history)
 
     def should_quarantine(self, history, now: float) -> bool:
         return self.risk(history, now) >= self.cfg.rate_threshold_ratio

@@ -33,6 +33,7 @@ from repro.cluster.hazard import DomainEstimator, HazardEstimator
 from repro.cluster.registry import ClusterState, ClusterTopology
 from repro.cluster.workload import WorkloadGen
 from repro.core.detector.changepoint import CusumDetector, SlopeDriftDetector
+from repro.core.detector.credit import CreditModel
 from repro.core.detector.detector import Detector
 from repro.core.detector.heartbeat import HeartbeatMonitor
 from repro.core.detector.lifecycle import LifecycleManager
@@ -202,6 +203,30 @@ class TrainingSim:
                 members.setdefault(
                     self.topo.domain_of(d, dom_cfg.domain), []).append(d)
             self._domain_members = members
+        # unified credit score (default-off ``credit`` switch): one scalar
+        # per device behind quarantine, admission and placement. ``credit``
+        # implies ``hazard`` implies ``lifecycle`` (policy __post_init__),
+        # so the manager and estimator above always exist here; the model
+        # attaches to the manager, which rekeys its decision chain on the
+        # credit bands.
+        cr_cfg = getattr(self.policy, "credit", None)
+        self.credit_model: Optional[CreditModel] = None
+        if cr_cfg:
+            cr_members = None
+            if cr_cfg.delta > 0.0:
+                cr_members = {}
+                for d in range(self.topo.n_devices):
+                    cr_members.setdefault(
+                        self.topo.domain_of(d, cr_cfg.domain), []).append(d)
+            self.credit_model = CreditModel(
+                cr_cfg, self.topo.n_devices,
+                hazard=self.hazard_estimator, domain_members=cr_members)
+            if self.lifecycle is not None:
+                self.lifecycle.credit = self.credit_model
+            # the planner owns the NTP veto, so it owns the veto counter
+            sched = getattr(self.policy, "scheduler", None)
+            if sched is not None and hasattr(sched, "credit_stats"):
+                sched.credit_stats = self.credit_model.stats
         # validation doubles as a fail-stop path (lifecycle gate): a
         # validation pass reports devices it measured dead instead of
         # leaving them to the heartbeat timeout
@@ -211,13 +236,27 @@ class TrainingSim:
         dkw.setdefault("workload_filter", policy_name.lower() == "resihp")
         if lc_cfg:
             dkw.setdefault("suppress_failstop_s", lc_cfg.failstop_suppress_s)
+            # the debounce hold is the second hand-tuned lifecycle constant
+            # retired into the credit fit (4.0 stays the credit-off default)
             dkw.setdefault("validation_debounce_s",
-                           lc_cfg.validation_debounce_s)
-        if lc_cfg and lc_cfg.drift:
+                           cr_cfg.validation_debounce_s if cr_cfg
+                           else lc_cfg.validation_debounce_s)
+        # a fitted threshold of 1.0 means the margin is unclearable — no
+        # shortfall is < 100% slow — so the whole slope/carry stack would be
+        # pure overhead; skip installing it and let the credit gamma term be
+        # the only slowness channel
+        drift_on = bool(lc_cfg and lc_cfg.drift
+                        and not (cr_cfg
+                                 and cr_cfg.drift_filter_threshold >= 1.0))
+        if drift_on:
             dkw.setdefault("drift_factory", SlopeDriftDetector)
             dkw.setdefault("carry_baseline", True)
+            # the hand-tuned 10% validation margin is retired as a fit
+            # output under the credit switch (0.10 stays the credit-off
+            # default via LifecycleConfig)
             dkw.setdefault("drift_filter_threshold",
-                           lc_cfg.drift_filter_threshold)
+                           cr_cfg.drift_filter_threshold if cr_cfg
+                           else lc_cfg.drift_filter_threshold)
             dkw.setdefault("workload_scalar_fn", self._workload_scalar)
         self.detector = Detector(
             healthy_time_fn=self._healthy_time,
@@ -239,6 +278,7 @@ class TrainingSim:
         self._belief_dirty = True
         self._decision: Optional[PolicyDecision] = None
         self._failslow_backlog: list = []  # (device, true_speed, detect_at_iter)
+        self._probation: set = set()  # devices with an active re-probe chain
         self.trace: list = []
         self.now = 0.0
         self.it = 0
@@ -397,12 +437,29 @@ class TrainingSim:
         seeds the belief with the *measured* speed."""
         if self.lifecycle is not None:
             dec = self.lifecycle.on_rejoin(device, self.now)
-            self.now += dec.probe_cost_s
+            async_probe = (self.credit_model is not None
+                           and self.credit_model.cfg.admission)
+            if async_probe:
+                # asynchronous admission (credit switch): the probe runs on
+                # the rejoining device itself — which is idle anyway — and
+                # overlaps the replan this very rejoin triggers, so no
+                # global time is charged; the measured speed still seeds
+                # the belief (the whole point of admission probing)
+                if dec.admit and dec.probe_cost_s > 0.0:
+                    self.credit_model.stats.async_admissions += 1
+            else:
+                self.now += dec.probe_cost_s
             if not dec.admit:
                 # quarantined: belief stays failed, heartbeat stays muted, no
                 # replan — the Scheduler keeps ignoring the flapper
                 return
             speed = dec.speed
+            if (async_probe and dec.probe_cost_s > 0.0 and speed < 1.0
+                    and self.credit_model.cfg.probation_recheck_s > 0.0):
+                # a degraded admission starts probation: nothing else ever
+                # re-measures a device the planner benched on this stale
+                # reading, so a transient throttle would pin it slow forever
+                self._schedule_probation(device)
         else:
             speed = 1.0
         # heartbeat-revive bugfix: clear the failed state so the device's
@@ -411,6 +468,35 @@ class TrainingSim:
         if self.known_speeds.get(device) != speed:
             self.known_speeds[device] = speed
             self._belief_dirty = True
+
+    def _schedule_probation(self, device: int):
+        """Queue a free async re-probe of ``device`` one recheck interval
+        out; the re-probe keeps following the device (and rescheduling)
+        until belief matches truth or the device fails again. At most one
+        chain runs per device."""
+        if device in self._probation:
+            return
+        self._probation.add(device)
+        recheck_s = self.credit_model.cfg.probation_recheck_s
+
+        def fn(cluster, now):
+            believed = self.known_speeds.get(device, 1.0)
+            true = cluster.devices[device].effective
+            if believed <= 0.0 or true <= 0.0:
+                # failed again / down right now: the next rejoin or
+                # validation restarts probation
+                self._probation.discard(device)
+                return
+            if true != believed:
+                self.known_speeds[device] = true
+                self._belief_dirty = True
+                self.credit_model.stats.probation_corrections += 1
+                self._push_event(Event(self.now + recheck_s, "callback",
+                                       fn=fn))
+            else:
+                self._probation.discard(device)
+
+        self._push_event(Event(self.now + recheck_s, "callback", fn=fn))
 
     def apply_events(self, t: float) -> list:
         """The single injection hook: fire every pending event with
@@ -514,8 +600,14 @@ class TrainingSim:
         # quarantine releases: probe expired quarantines and readmit (or
         # extend the backoff for devices that are still down)
         if self.lifecycle is not None:
+            release_free = (self.credit_model is not None
+                            and self.credit_model.cfg.admission)
             for dec in self.lifecycle.poll_releases(self.now):
-                self.now += dec.probe_cost_s
+                if not release_free:
+                    # under the credit switch the release probe runs on the
+                    # still-benched device concurrently with training, like
+                    # the rejoin probe — no global charge
+                    self.now += dec.probe_cost_s
                 if not dec.admit:
                     continue
                 self.detector.heartbeat.revive(dec.device, self.now)
@@ -595,6 +687,19 @@ class TrainingSim:
             # the hazard-blind planner path stays byte-identical)
             risk = (self.lifecycle.risk_scores(self.now)
                     if self.lifecycle is not None else {})
+            # unified credit view for placement / restart weighting (None
+            # when the switch is off — the credit-blind path stays
+            # byte-identical)
+            credit_scores = None
+            if (self.credit_model is not None
+                    and self.credit_model.cfg.planning):
+                credit_scores = self.credit_model.scores(
+                    self.lifecycle.histories, self.now) or None
+                # one scalar means ONE: the raw hazard view is dropped, not
+                # merged — risk only reaches placement through the credit
+                # score's alpha term. Without this, a zero-signal credit
+                # config would still pay the risk view's plan-cache churn.
+                risk = {}
             if self.domain_estimator is not None:
                 # pooled domain view: a hot domain's residents are excluded
                 # wholesale (bench the rack before its third device fails)
@@ -610,7 +715,8 @@ class TrainingSim:
             self._decision = self.policy.decide(self.known_speeds,
                                                 changed=changed,
                                                 excluded=excluded,
-                                                risk=risk or None)
+                                                risk=risk or None,
+                                                credit=credit_scores)
             if (self._decision.aborted and self.domain_estimator is not None
                     and dq):
                 # a bench is advisory, never fatal: if excluding the hot
@@ -621,7 +727,8 @@ class TrainingSim:
                 self._decision = self.policy.decide(self.known_speeds,
                                                     changed=changed,
                                                     excluded=excluded,
-                                                    risk=risk or None)
+                                                    risk=risk or None,
+                                                    credit=credit_scores)
                 events.append(("bench-waived", tuple(sorted(dq))))
             self._belief_dirty = False
             if self._decision.reconfig_overhead_s:

@@ -159,6 +159,14 @@ class LifecycleManager:
     # anything with risk/should_quarantine/backoff_s and a cfg carrying
     # ``quarantine``/``planning`` gates). None => flap-counter policy.
     hazard: Optional[object] = None
+    # unified credit model (repro.core.detector.credit.CreditModel, attached
+    # by the simulator when the ``credit`` switch is on). When present, the
+    # decision chain rekeys on credit bands: quarantine entry is
+    # ``credit < quarantine_band`` (strict — band 0 never quarantines),
+    # backoff scales with the shortfall below the band, and admission is
+    # banded (``credit >= probe_band`` admits directly with no probe at
+    # all). None => the hazard / flap-counter chain, byte-identical.
+    credit: Optional[object] = None
     histories: dict = field(default_factory=dict)  # device -> FailureHistory
     stats: LifecycleStats = field(default_factory=LifecycleStats)
 
@@ -190,7 +198,15 @@ class LifecycleManager:
     def _hazard_quarantine(self) -> bool:
         return self.hazard is not None and self.hazard.cfg.quarantine
 
+    def _credit_quarantine(self) -> bool:
+        return self.credit is not None and self.credit.cfg.quarantine
+
     def _should_quarantine(self, h: FailureHistory, now: float) -> bool:
+        if self._credit_quarantine():
+            # band-keyed entry on the unified scalar: strictly below the
+            # quarantine band (band 0.0 therefore never quarantines)
+            c = self.credit.credit_of(h, now, self.histories)
+            return c < self.credit.cfg.quarantine_band
         if self._hazard_quarantine():
             # hazard-keyed entry: the estimated per-device rate (fail-slows
             # included) crossed the quarantine threshold — not "N fail-stops
@@ -201,7 +217,21 @@ class LifecycleManager:
 
     def _enter_quarantine(self, h: FailureHistory, now: float) -> RejoinDecision:
         h.quarantine_level += 1
-        if self._hazard_quarantine():
+        if self._credit_quarantine():
+            # backoff scales with the shortfall below the quarantine band:
+            # a device just under the band sits out ~base_s, a zero-credit
+            # part sits out up to (1 + scale*band) times longer per level
+            ccfg = self.credit.cfg
+            c = self.credit.credit_of(h, now, self.histories)
+            shortfall = max(ccfg.quarantine_band - c, 0.0)
+            dur = min(
+                self.cfg.backoff_base_s
+                * (1.0 + ccfg.backoff_scale * shortfall)
+                * self.cfg.backoff_factor ** (h.quarantine_level - 1),
+                self.cfg.backoff_max_s,
+            )
+            self.credit.stats.quarantines += 1
+        elif self._hazard_quarantine():
             dur = self.hazard.backoff_s(
                 h, now, base_s=self.cfg.backoff_base_s,
                 max_s=self.cfg.backoff_max_s, level=h.quarantine_level,
@@ -220,6 +250,19 @@ class LifecycleManager:
 
     def _admit(self, h: FailureHistory, now: float) -> RejoinDecision:
         cost = 0.0
+        if (self.credit is not None and self.credit.cfg.admission
+                and self.credit.credit_of(h, now, self.histories)
+                >= self.credit.cfg.probe_band):
+            # banded direct admission: a device whose whole evidence record
+            # sums to near-full credit skips the micro-benchmark entirely —
+            # belief enters at 1.0 and no probe time exists to charge
+            self.credit.stats.direct_admits += 1
+            h.state = READMITTED if h.fail_stops or h.fail_slows else HEALTHY
+            h.rejoins.append(now)
+            h.quarantine_level = 0
+            self.stats.readmissions += 1
+            return RejoinDecision(h.device, admit=True, speed=1.0,
+                                  probe_cost_s=0.0, state=h.state)
         if self.cfg.admission and self.probe_fn is not None:
             h.state = PROBING
             speed = self._probe(h)

@@ -145,6 +145,18 @@ class Scheduler:
     # nonuniform-TP adaptation axis (NTPConfig; ``True`` for defaults;
     # default OFF = exclusion-only Eq. 3/4, byte-identical legacy planning)
     ntp: Optional[object] = None
+    # credit-gated NTP (credit switch only): devices whose credit sits
+    # strictly below this band are vetoed from shrink-shard retention —
+    # nonuniform widths are for trustworthy stragglers, a low-credit slow
+    # device competes as an exclusion instead. 0.0 (the default) disables
+    # the veto, so callers without a credit view are untouched.
+    ntp_min_credit: float = 0.0
+    # counter sink for the credit path (a CreditStats-shaped object): the
+    # planner is the only layer that knows when the NTP veto actually bites,
+    # so it bumps ``ntp_vetoes`` here on every uncached plan that vetoed
+    # someone. None (the default) counts nothing.
+    credit_stats: Optional[object] = field(default=None, repr=False,
+                                           compare=False)
     _cache: dict = field(default_factory=dict, init=False, repr=False,
                          compare=False)
 
@@ -152,27 +164,31 @@ class Scheduler:
         if self.ntp is True:
             self.ntp = NTPConfig()
 
-    def _signature(self, speeds: dict, failed, quarantined, device_risk):
+    def _signature(self, speeds: dict, failed, quarantined, device_risk,
+                   device_credit=None):
         """Frozen (failed, quarantined, risk-bucketed speeds) cache key.
         Healthy (1.0) speeds are elided so the signature scales with the
-        failure count, not the fleet; risk scores are bucketed at 1e-6 —
-        fine enough that a tie-break could only flip between devices whose
-        estimated hazards are practically indistinguishable. The NTP config
-        is part of the key: the same failure set yields a different plan
-        under shrink-shard than under exclusion, and a cached exclusion plan
-        must not alias an NTP request (or vice versa)."""
+        failure count, not the fleet; risk/credit scores are bucketed at
+        1e-6 — fine enough that a tie-break could only flip between devices
+        whose estimated hazards are practically indistinguishable. The NTP
+        config is part of the key: the same failure set yields a different
+        plan under shrink-shard than under exclusion, and a cached exclusion
+        plan must not alias an NTP request (or vice versa)."""
         sig_speeds = tuple(sorted(
             (d, v) for d, v in speeds.items() if v != 1.0))
         sig_risk = (tuple(sorted((d, round(r, 6))
                                  for d, r in device_risk.items()))
                     if device_risk else None)
+        sig_credit = (tuple(sorted((d, round(c, 6))
+                                   for d, c in device_credit.items()))
+                      if device_credit else None)
         return (sig_speeds, frozenset(failed), frozenset(quarantined),
-                sig_risk, self.ntp)
+                sig_risk, sig_credit, self.ntp)
 
     # ------------------------------------------------------------ adaptation
     def adapt(self, plan: ParallelPlan, speeds: dict, *,
               failed=frozenset(), quarantined=frozenset(),
-              device_risk=None) -> AdaptationPlan:
+              device_risk=None, device_credit=None) -> AdaptationPlan:
         """speeds: {device_id: p_i}; failed: fail-stop device ids (speed 0);
         quarantined: lifecycle-quarantined devices — excluded from plans (and
         the standby pool) exactly like failed ones, even if a rejoin has made
@@ -181,10 +197,15 @@ class Scheduler:
         device_risk: optional {device_id: hazard score} from the lifecycle
         hazard estimator — equal-throughput placement choices (TP membership,
         standby pull-in) prefer low-hazard devices; None (the default) keeps
-        selection byte-identical to the hazard-blind planner."""
+        selection byte-identical to the hazard-blind planner.
+        device_credit: optional {device_id: credit in [0, 1]} from the
+        unified credit model — supersedes ``device_risk`` (low credit maps
+        to high risk for the same tie-breaks) and, with ``ntp_min_credit``
+        set, vetoes low-credit devices from shrink-shard retention."""
         key = entry = None
         if self.plan_cache_size > 0:
-            key = self._signature(speeds, failed, quarantined, device_risk)
+            key = self._signature(speeds, failed, quarantined, device_risk,
+                                  device_credit)
             entry = self._cache.get(key)
             # the entry pins its plan object, so an `is` match cannot be an
             # id-reuse collision; a different plan under the same signature
@@ -193,7 +214,8 @@ class Scheduler:
                 return entry[1]
         ad = self._adapt_uncached(plan, speeds, failed=failed,
                                   quarantined=quarantined,
-                                  device_risk=device_risk)
+                                  device_risk=device_risk,
+                                  device_credit=device_credit)
         if key is not None:
             if len(self._cache) >= self.plan_cache_size:
                 self._cache.clear()
@@ -202,8 +224,20 @@ class Scheduler:
 
     def _adapt_uncached(self, plan: ParallelPlan, speeds: dict, *,
                         failed=frozenset(), quarantined=frozenset(),
-                        device_risk=None) -> AdaptationPlan:
+                        device_risk=None, device_credit=None) -> AdaptationPlan:
         t0 = time.perf_counter() if self.measure_overhead else 0.0
+        ntp_veto = frozenset()
+        if device_credit:
+            # credit supersedes the raw hazard view: the same placement
+            # tie-breaks run on ``2 - credit`` (injective, order-reversing
+            # in credit), so low-credit devices rank exactly like
+            # high-hazard ones without a second ranking path
+            device_risk = {d: 2.0 - c for d, c in device_credit.items()}
+            if self.ntp is not None and self.ntp_min_credit > 0.0:
+                ntp_veto = frozenset(d for d, c in device_credit.items()
+                                     if c < self.ntp_min_credit)
+                if ntp_veto and self.credit_stats is not None:
+                    self.credit_stats.ntp_vetoes += len(ntp_veto)
         failed = (set(failed) | {d for d, v in speeds.items() if v <= 0.0}
                   | set(quarantined))
         # per-domain failed-device counts for domain-spread standby offers
@@ -217,7 +251,11 @@ class Scheduler:
         notes = []
         if quarantined:
             notes.append(f"quarantined (excluded): {sorted(quarantined)}")
-        if device_risk:
+        if device_credit:
+            worst = min(device_credit.items(), key=lambda kv: (kv[1], kv[0]))
+            notes.append(f"credit-aware placement over {len(device_credit)} "
+                         f"scored devices (worst d{worst[0]}: {worst[1]:.2f})")
+        elif device_risk:
             worst = max(device_risk.items(), key=lambda kv: (kv[1], kv[0]))
             notes.append(f"risk-aware placement over {len(device_risk)} "
                          f"scored devices (worst d{worst[0]}: {worst[1]:.2f}x)")
@@ -253,7 +291,7 @@ class Scheduler:
                 pool = list(st.devices) + offered
                 rec: TPReconfig = reconfigure_tp_group(
                     pool, speeds, k_min=self.k_min, failed=failed,
-                    risk=device_risk, ntp=self.ntp)
+                    risk=device_risk, ntp=self.ntp, ntp_veto=ntp_veto)
                 if rec.tp == 0:
                     dead.append((r, s))
                     stages.append(StagePlan((), st.layers))

@@ -86,7 +86,8 @@ def candidate_degrees(n_survivors: int, k_min: int) -> list:
 
 
 def shrink_shard_candidate(survivors, speeds, ntp: NTPConfig,
-                           *, k_min: int = 1) -> Optional[TPReconfig]:
+                           *, k_min: int = 1,
+                           veto=frozenset()) -> Optional[TPReconfig]:
     """NTP candidate over the surviving pool: widths ``f_i ∝ p_i`` so the
     group's per-layer time ``max_i(f_i / p_i)`` is flat across members and
     throughput reaches ``efficiency * sum(p_i)``.
@@ -100,10 +101,18 @@ def shrink_shard_candidate(survivors, speeds, ntp: NTPConfig,
       Eq. 3 expresses as a minimum degree); capped excess re-spreads
       proportionally over the uncapped members (water-filling).
 
+    ``veto`` (credit-gated NTP, default empty = legacy behaviour): devices a
+    caller's trust model bars from shrink-shard retention — they go to
+    standby like a below-min-fraction sliver, so the exclusion candidate is
+    the only plan that may keep them. Nonuniform widths are for trustworthy
+    stragglers (thermal capping); a device whose *history* says the slowness
+    is a symptom should compete as an exclusion, not keep a shard.
+
     Returns None when no feasible group remains (fewer than ``k_min``
     members, or fewer than 2 — a single-device "group" is plain exclusion).
     """
-    kept = sorted(survivors, key=lambda d: (-speeds.get(d, 1.0), d))
+    kept = sorted((d for d in survivors if d not in veto),
+                  key=lambda d: (-speeds.get(d, 1.0), d))
     while kept:
         tot = sum(speeds.get(d, 1.0) for d in kept)
         if speeds.get(kept[-1], 1.0) / tot >= ntp.min_fraction:
@@ -142,7 +151,8 @@ def shrink_shard_candidate(survivors, speeds, ntp: NTPConfig,
 
 def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
                          failed=(), risk=None,
-                         ntp: Optional[NTPConfig] = None) -> TPReconfig:
+                         ntp: Optional[NTPConfig] = None,
+                         ntp_veto=frozenset()) -> TPReconfig:
     """group: device ids of the original TP group.
     speeds: {device_id: normalized throughput p_i}; fail-stop devices may be
     listed in `failed` or have speed <= 0.
@@ -152,6 +162,8 @@ def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
     ntp: optional NTPConfig — also score a shrink-shard (nonuniform-width)
     candidate and return it when it strictly beats exclusion (None => exact
     legacy exclusion-only behaviour).
+    ntp_veto: devices barred from shrink-shard retention (credit-gated NTP;
+    empty => every survivor is shrink-eligible, the legacy behaviour).
     """
     # a device absent from `speeds` is healthy (p = 1.0) everywhere in this
     # module — only an explicit `failed` listing or a speed <= 0 excludes it
@@ -181,7 +193,8 @@ def reconfigure_tp_group(group, speeds, *, k_min: int = 1,
                          tuple(sorted(failed)))
     if ntp is None:
         return exclude
-    shrink = shrink_shard_candidate(survivors, speeds, ntp, k_min=k_min)
+    shrink = shrink_shard_candidate(survivors, speeds, ntp, k_min=k_min,
+                                    veto=ntp_veto)
     # strictly-greater: ties keep exclusion (uniform shards, frees standbys)
     if shrink is None or shrink.effective_throughput <= best_thru:
         return exclude

@@ -55,11 +55,16 @@ POLICIES = {
     # fallback (bench waived when it would kill the session) all ride the
     # shared step loop — parity must hold with the whole stack on
     "resihp+dom": {"plan_overhead_fixed": 0.25, "domains": True},
+    # the unified credit path (band-keyed quarantine/admission, credit-gated
+    # NTP veto, credit-aware placement) also rides the shared step loop —
+    # parity with the whole credit stack on
+    "resihp+credit": {"plan_overhead_fixed": 0.25, "credit": True,
+                      "ntp": True},
     "recycle+": {},
     "oobleck+": {},
 }
 # policy-label suffixes that select a ResiHPPolicy switch, not a policy name
-_LABEL_SUFFIXES = ("+ntp", "+dom")
+_LABEL_SUFFIXES = ("+ntp", "+dom", "+credit")
 
 
 def _policy_name(label: str) -> str:
